@@ -1,0 +1,88 @@
+"""Shared benchmark machinery: run the Galvatron engine in every baseline
+mode the paper compares and tabulate estimated throughput."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Optional, Sequence
+
+from repro.configs.paper_models import paper_model_specs
+from repro.core import (ClusterSpec, GalvatronOptimizer, OptimizerConfig,
+                        deepspeed_3d, galvatron_variant, pure_baseline)
+from repro.core.optimizer import alpa_like, alpa_like_sdp
+
+GB = 1024 ** 3
+
+STRATEGY_ORDER = [
+    "PyTorch DDP (DP)", "Megatron (TP)", "PyTorch GPipe (PP)",
+    "FSDP/ZeRO-3 (SDP)", "DeepSpeed 3D", "Galvatron (DP+TP)",
+    "Galvatron (DP+PP)", "Galvatron", "Galvatron-Base",
+    "Galvatron (1F1B+Bi-obj)", "Alpa (est.)", "Galvatron-BMW",
+]
+
+
+def strategy_config(name: str, n_devices: int) -> OptimizerConfig:
+    return {
+        "PyTorch DDP (DP)": lambda: pure_baseline("dp", n_devices),
+        "Megatron (TP)": lambda: pure_baseline("tp", n_devices),
+        "PyTorch GPipe (PP)": lambda: pure_baseline("pp", n_devices),
+        "FSDP/ZeRO-3 (SDP)": lambda: pure_baseline("sdp", n_devices),
+        "DeepSpeed 3D": lambda: deepspeed_3d(n_devices),
+        "Galvatron (DP+TP)": lambda: galvatron_variant("dp+tp"),
+        "Galvatron (DP+PP)": lambda: galvatron_variant("dp+pp"),
+        "Galvatron": lambda: galvatron_variant("galvatron"),
+        "Galvatron-Base": lambda: galvatron_variant("base"),
+        "Galvatron (1F1B+Bi-obj)": lambda: galvatron_variant("1f1b-biobj"),
+        "Alpa (est.)": lambda: alpa_like(),
+        "Galvatron-BMW": lambda: galvatron_variant("bmw"),
+    }[name]()
+
+
+def run_row(model: str, cluster: ClusterSpec, strategies: Sequence[str],
+            *, batch_grid=None, n_bins: int = 128,
+            micro_candidates: int = 3) -> Dict[str, Dict]:
+    specs = paper_model_specs(model)
+    out = {}
+    for name in strategies:
+        t0 = time.time()
+        plan = None
+        cfg_list = ([alpa_like(), alpa_like_sdp()] if name == "Alpa (est.)"
+                    else [strategy_config(name, cluster.n_devices)])
+        for cfg in cfg_list:
+            cfg.batch_grid = batch_grid or [8, 16, 32, 64, 128]
+            cfg.n_bins = n_bins
+            cfg.micro_candidates = micro_candidates
+            p = GalvatronOptimizer(specs, cluster, cfg).optimize()
+            if p and (plan is None or p.est_throughput > plan.est_throughput):
+                plan = p
+        out[name] = {
+            "tpt": plan.est_throughput if plan else 0.0,
+            "batch": plan.global_batch if plan else 0,
+            "plan": plan.summary() if plan else "OOM",
+            "search_s": time.time() - t0,
+        }
+    return out
+
+
+def print_table(title: str, rows: Dict[str, Dict[str, Dict]],
+                csv_prefix: str) -> List[str]:
+    """rows: {model: {strategy: result}}; also returns CSV lines."""
+    csv: List[str] = []
+    print(f"\n=== {title} ===")
+    models = list(rows)
+    width = max(len(s) for s in STRATEGY_ORDER) + 2
+    header = " " * width + "  ".join(f"{m:>18}" for m in models)
+    print(header)
+    strategies = [s for s in STRATEGY_ORDER if any(s in rows[m] for m in models)]
+    for s in strategies:
+        cells = []
+        for m in models:
+            r = rows[m].get(s)
+            if r is None:
+                cells.append(f"{'-':>18}")
+                continue
+            txt = "OOM" if r["tpt"] == 0 else f"{r['tpt']:.2f} ({r['batch']})"
+            cells.append(f"{txt:>18}")
+            csv.append(f"{csv_prefix}/{m}/{s},{r['search_s']*1e6:.0f},"
+                       f"{r['tpt']:.3f}")
+        print(f"{s:<{width}}" + "  ".join(cells))
+    return csv

@@ -1,0 +1,86 @@
+"""Render EXPERIMENTS.md tables from the dry-run JSONL artifacts.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+from typing import Dict, List
+
+
+def load(path: str) -> List[Dict]:
+    p = pathlib.Path(path)
+    if not p.exists():
+        return []
+    rows = []
+    seen = set()
+    for line in p.read_text().splitlines():
+        if not line.strip():
+            continue
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"])
+        if key in seen:
+            continue
+        seen.add(key)
+        rows.append(r)
+    return rows
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    if b >= 1e12:
+        return f"{b/1e12:.1f}T"
+    if b >= 1e9:
+        return f"{b/1e9:.1f}G"
+    if b >= 1e6:
+        return f"{b/1e6:.1f}M"
+    return f"{b:.0f}"
+
+
+def dryrun_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | mode | compile s | XLA temp/dev | modeled resident/dev | fits 16G |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['mode']} "
+            f"| {r['compile_seconds']} | {fmt_bytes(r['memory']['temp_bytes'])} "
+            f"| {fmt_bytes(r.get('modeled_resident_bytes_per_device'))} "
+            f"| {'yes' if r.get('modeled_fits_16g') else 'NO'} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict]) -> str:
+    out = ["| arch | shape | mesh | t_comp s | t_mem s | t_coll s | bottleneck | MODEL/HLO flops | HLO flops | coll bytes |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+            f"| {r['t_collective_s']:.4f} | **{r['bottleneck']}** "
+            f"| {r['useful_flops_ratio']:.2f} | {r['hlo_flops']:.3g} "
+            f"| {fmt_bytes(r['collective_bytes'])} |")
+    return "\n".join(out)
+
+
+def main():
+    single = load("experiments/dryrun_single.jsonl")
+    multi = load("experiments/dryrun_multi.jsonl")
+    print(f"## Generated tables ({len(single)} single-pod, "
+          f"{len(multi)} multi-pod rows)\n")
+    print("### Dry-run (single pod 16x16 = 256 chips)\n")
+    print(dryrun_table(single))
+    if multi:
+        print("\n### Dry-run (multi-pod 2x16x16 = 512 chips)\n")
+        print(dryrun_table(multi))
+    print("\n### Roofline (single pod)\n")
+    print(roofline_table(single))
+    if multi:
+        print("\n### Roofline (multi-pod)\n")
+        print(roofline_table(multi))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,59 @@
+"""Quickstart: the Galvatron-BMW workflow in ~40 lines.
+
+1. describe your model as per-layer workloads,
+2. let the engine search the hybrid parallelism plan,
+3. execute the plan with the sharded runtime.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.specs import layerspecs_for
+from repro.core import GalvatronOptimizer, galvatron_variant, paper_8gpu, tpu_v5e_pod
+from repro.data import DataConfig, batch_specs, synthetic_lm_batches
+from repro.launch.mesh import make_local_mesh
+from repro.runtime import ShardPolicy, init_train_state, make_train_step
+
+GB = 1024 ** 3
+
+# --- 1) search: BERT-Huge on the paper's 8-GPU testbed ---------------------
+from repro.configs.paper_models import paper_model_specs
+specs = paper_model_specs("bert-huge-32")
+ocfg = galvatron_variant("bmw")
+ocfg.batch_grid = [16, 32, 64]
+ocfg.n_bins = 128
+plan = GalvatronOptimizer(specs, paper_8gpu().with_budget(8 * GB),
+                          ocfg).optimize()
+print("BERT-Huge-32 @ 8x RTX-TITAN (8GB):")
+print("  ", plan.summary())
+print(f"   est. throughput: {plan.est_throughput:.1f} samples/s "
+      f"(alpha_t={plan.alpha_t:.2f}, alpha_m={plan.alpha_m:.2f})")
+
+# --- 2) search: an assigned arch on a TPU v5e slice ------------------------
+cfg = get_config("qwen3-8b")
+ocfg = galvatron_variant("bmw")
+ocfg.batch_grid = [256]
+ocfg.n_bins = 64
+ocfg.micro_candidates = 2
+ocfg.max_pp = 2
+plan_tpu = GalvatronOptimizer(layerspecs_for(cfg, 4096), tpu_v5e_pod(64),
+                              ocfg).optimize()
+print("\nqwen3-8b @ 64x TPU v5e:")
+print("  ", plan_tpu.summary())
+
+# --- 3) execute: train a reduced model with the plan's policy --------------
+cfg_small = cfg.reduced()
+policy = ShardPolicy.from_strategy(plan_tpu.strategies[1])
+mesh = make_local_mesh()
+dcfg = DataConfig(seq_len=64, global_batch=4, vocab_size=cfg_small.vocab_size)
+with mesh:
+    step = make_train_step(cfg_small, mesh, policy, batch_specs(dcfg))
+    params, opt = init_train_state(cfg_small, mesh, policy)
+    gen = synthetic_lm_batches(dcfg)
+    print("\ntraining reduced qwen3 with the searched policy:")
+    for i in range(5):
+        batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+        params, opt, m = step.fn(params, opt, batch)
+        print(f"  step {i}: loss={float(m['loss']):.4f}")
+print("quickstart done.")

@@ -1,0 +1,56 @@
+"""Plan-search showcase: reproduce Fig. 6-style optimal plans for
+heterogeneous models (Swin's uneven stages, T5-512/4's enc/dec imbalance)
+and for assigned architectures on TPU pods.
+
+    PYTHONPATH=src python examples/search_plans.py
+"""
+from repro.configs import get_config
+from repro.configs.paper_models import paper_model_specs
+from repro.configs.specs import layerspecs_for
+from repro.core import (GalvatronOptimizer, galvatron_variant, paper_8gpu,
+                        paper_16gpu_low, tpu_v5e_pod)
+
+GB = 1024 ** 3
+
+
+def show(title, specs, cluster, grid):
+    cfg = galvatron_variant("bmw")
+    cfg.batch_grid = grid
+    cfg.n_bins = 96
+    cfg.micro_candidates = 2
+    plan = GalvatronOptimizer(specs, cluster, cfg).optimize()
+    print(f"\n{title}")
+    if plan is None:
+        print("   infeasible")
+        return
+    print(f"   {plan.summary()}")
+    print(f"   tpt={plan.est_throughput:.1f}/s  alpha_t={plan.alpha_t:.2f} "
+          f"alpha_m={plan.alpha_m:.2f}  stage_mem(GB)="
+          f"{[round(m/GB, 1) for m in (plan.est_stage_mem or [])]}")
+
+
+def main():
+    # Fig. 6 case A/B: BERT and Swin on 8 low-perf GPUs, 8GB
+    show("case A: BERT-Huge-32, 8GPU @ 8G",
+         paper_model_specs("bert-huge-32"),
+         paper_8gpu().with_budget(8 * GB), [8, 16, 32])
+    show("case B: Swin-Huge-32, 8GPU @ 8G (uneven layers)",
+         paper_model_specs("swin-huge-32"),
+         paper_8gpu().with_budget(8 * GB), [16, 32, 64])
+    # Fig. 6 case C: imbalanced T5 on 16 GPUs
+    show("case C: T5-512/4-32, 16GPU low-perf @ 8G (enc/dec imbalance)",
+         paper_model_specs("t5-512/4-32"),
+         paper_16gpu_low().with_budget(8 * GB), [16, 32, 64])
+    # assigned archs on TPU slices.  kimi-k2 (1T params) is INFEASIBLE even
+    # on a full 256-chip pod: AdamW states alone are 62 GB/chip vs 16 GB
+    # HBM — the search engine reaches the same verdict as the §Perf
+    # capacity analysis in EXPERIMENTS.md (needs >=4 pods or bf16 states).
+    for arch, chips in [("qwen3-8b", 64), ("kimi-k2-1t-a32b", 256),
+                        ("mamba2-370m", 64)]:
+        cfg = get_config(arch)
+        show(f"assigned: {arch} @ {chips}x v5e, seq 4096",
+             layerspecs_for(cfg, 4096), tpu_v5e_pod(chips), [64, 128, 256])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: Galvatron-BMW — automatic hybrid-parallel training, in JAX.
+
+Layers:
+  repro.core      search engine (decision tree + DP + BMW balance + estimator)
+  repro.models    pure-JAX model zoo (dense/MoE/SSM/hybrid/enc-dec/VLM)
+  repro.runtime   plan -> pjit/shard_map execution
+  repro.kernels   Pallas TPU kernels (flash attention, SSD scan, rmsnorm)
+  repro.configs   assigned architectures + paper models
+  repro.launch    production meshes, dry-run, train/serve drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from .store import load_pytree, restore_train_state, save_pytree, save_train_state
+
+__all__ = ["load_pytree", "restore_train_state", "save_pytree",
+           "save_train_state"]

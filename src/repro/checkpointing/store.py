@@ -1,0 +1,84 @@
+"""Sharded-pytree checkpointing.
+
+Parameters/optimizer state are flattened by tree path into a single ``.npz``
+per step directory, with a JSON manifest carrying step metadata.  Arrays are
+fetched shard-by-shard via ``jax.device_get`` (fully-addressable process);
+restore re-shards through the executor's out_shardings.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype == jnp.bfloat16:
+            flat[key + "@bf16"] = arr.astype(np.float32)
+        else:
+            flat[key] = arr
+    return flat
+
+
+def save_pytree(tree, path: str | pathlib.Path) -> None:
+    path = pathlib.Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load_pytree(template, path: str | pathlib.Path):
+    """Restore into the structure of ``template`` (same tree paths)."""
+    data = np.load(pathlib.Path(path), allow_pickle=False)
+    lookup = {}
+    for k in data.files:
+        if k.endswith("@bf16"):
+            lookup[k[:-5]] = data[k].astype(jnp.bfloat16)
+        else:
+            lookup[k] = data[k]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for path_keys, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                       for k in path_keys)
+        arr = lookup[key]
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), leaves)
+
+
+def save_train_state(step: int, params, opt_state,
+                     directory: str | pathlib.Path,
+                     extra: Optional[Dict[str, Any]] = None) -> pathlib.Path:
+    d = pathlib.Path(directory) / f"step_{step:08d}"
+    d.mkdir(parents=True, exist_ok=True)
+    save_pytree(params, d / "params.npz")
+    save_pytree(opt_state, d / "opt_state.npz")
+    (d / "meta.json").write_text(json.dumps({"step": step, **(extra or {})}))
+    return d
+
+
+def restore_train_state(params_template, opt_template,
+                        directory: str | pathlib.Path,
+                        step: Optional[int] = None) -> Tuple[Any, Any, int]:
+    d = pathlib.Path(directory)
+    if step is None:
+        cands = sorted(d.glob("step_*"))
+        if not cands:
+            raise FileNotFoundError(f"no checkpoints under {d}")
+        d = cands[-1]
+    else:
+        d = d / f"step_{step:08d}"
+    meta = json.loads((d / "meta.json").read_text())
+    params = load_pytree(params_template, d / "params.npz")
+    opt_state = load_pytree(opt_template, d / "opt_state.npz")
+    return params, opt_state, int(meta["step"])

@@ -1,0 +1,51 @@
+"""Architecture configs: the 10 assigned architectures + the paper's models.
+
+Each assigned arch lives in ``configs/<id>.py`` (exact dims from the
+assignment, source cited) and registers itself here.  ``get_config(name)``
+is the single lookup used by the launcher (``--arch <id>``).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+_ARCH_MODULES = [
+    "qwen2_72b", "qwen2_5_14b", "internvl2_26b", "kimi_k2_1t_a32b",
+    "qwen3_4b", "zamba2_1_2b", "whisper_medium", "mamba2_370m",
+    "arctic_480b", "qwen3_8b",
+]
+
+_REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    _ensure_loaded()
+    key = name.replace("_", "-")
+    if key not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[key]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)
+
+
+_LOADED = False
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    for m in _ARCH_MODULES:
+        importlib.import_module(f"repro.configs.{m}")
+    importlib.import_module("repro.configs.paper_models")

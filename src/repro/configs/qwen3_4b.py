@@ -1,0 +1,10 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family card] — dense, GQA, QK-norm."""
+from repro.configs import register
+from repro.models.common import ModelConfig
+
+QWEN3_4B = register(ModelConfig(
+    name="qwen3-4b", arch_type="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,
+    d_ff=9728, vocab_size=151936,
+    qk_norm=True, head_dim=128, rope_theta=1e6, norm_eps=1e-6,
+))

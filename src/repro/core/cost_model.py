@@ -1,0 +1,207 @@
+"""Cost estimator (paper §V + Appendix C/D).
+
+Estimates, for one layer under one hybrid strategy:
+  * ``O_f``  — forward activation memory per device,
+  * ``O_b``  — extra backward peak memory per device (CKPT recompute),
+  * ``O_ms`` — model-state memory per device (params + grads + optimizer),
+  * ``c``    — execution time (fwd + bwd, incl. communication, the CKPT
+               recompute forward, and the computation/communication
+               *overlap slowdown* the paper emphasizes).
+
+Two time variants are produced: ``time`` (last micro-batch — includes DP/SDP
+gradient synchronization) and ``time_nosync`` (earlier micro-batches), used
+by the 1F1B pipeline cost Eq. 9.
+
+Communication volume factors follow §III-A2:
+  DP   all-reduce(grads)            : 2 (N-1)/N * bytes
+  SDP  2x all-gather + reduce-scatter: 3 (N-1)/N * bytes  (1.5x DP)
+  TP   all-reduce(activations) fwd+bwd
+  MoE  all-to-all dispatch/combine when experts are sharded over TP level
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .hardware import ClusterSpec
+from .layerspec import LayerSpec
+from .strategy import DP, SDP, TP, Strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCosts:
+    time: float           # seconds, fwd+bwd incl. grad sync (last micro-batch)
+    time_nosync: float    # seconds, fwd+bwd without DP/SDP grad sync
+    mem_f: float          # O_f bytes per device
+    mem_b: float          # O_b bytes per device
+    mem_ms: float         # O_ms bytes per device
+    time_fwd: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModelConfig:
+    bytes_per_param_states: float = 16.0  # fp16 p + fp16 g + fp32 (p, m, v)
+    bytes_per_param: float = 2.0          # live copy used in compute
+    act_bytes: float = 2.0
+    mfu: float = 0.45                     # achieved fraction of peak compute
+    # TP-replicated activation bytes per layer = this many boundary-sized
+    # tensors (Megatron keeps LN inputs + residuals replicated — a fixed
+    # ~2 x (seq x hidden), NOT a fraction of the intermediate, which would
+    # wildly overcharge attention-matrix-heavy layers)
+    tp_act_replicated_bnd: float = 2.0
+    # when True expert weights are sharded along the TP level (expert
+    # parallelism) and token dispatch uses all-to-all
+    moe_expert_parallel_tp: bool = True
+
+
+class CostModel:
+    def __init__(self, cluster: ClusterSpec,
+                 config: Optional[CostModelConfig] = None,
+                 profiled_times: Optional[dict] = None):
+        self.cluster = cluster
+        self.cfg = config or CostModelConfig()
+        # {layer name: measured forward seconds/sample} — paper §V profiling
+        self.profiled_times = profiled_times or {}
+
+    # ------------------------------------------------------------------
+    # helpers
+    # ------------------------------------------------------------------
+    def _level_bandwidth(self, strat: Strategy, paradigm: str) -> float:
+        """Bandwidth of the device group a paradigm's collective spans.
+
+        Levels are ordered outer→inner; a level's collective runs between
+        device blocks of size = product of inner degrees, so its *span* is
+        its degree times everything inside it.  Outer levels straddle slower
+        boundaries on hierarchical clusters.
+        """
+        span = 1
+        for p, k in reversed(strat.levels):
+            span *= k
+            if p == paradigm:
+                return self.cluster.bandwidth_for_group(span)
+        return self.cluster.bandwidth_for_group(1)
+
+    @staticmethod
+    def _ring_factor(n: int) -> float:
+        return (n - 1) / n if n > 1 else 0.0
+
+    def _overlap(self, comp: float, comm: float) -> float:
+        """Overlapped comp & comm with the paper's contention slowdown."""
+        if comp <= 0.0:
+            return comm
+        if comm <= 0.0:
+            return comp
+        sd = self.cluster.device.overlap_slowdown
+        return max(comp * sd, comm * sd)
+
+    # ------------------------------------------------------------------
+    # main entry
+    # ------------------------------------------------------------------
+    def layer_costs(self, spec: LayerSpec, strat: Strategy,
+                    micro_batch_size: float, *, inflight: int = 1) -> LayerCosts:
+        cfg = self.cfg
+        dev = self.cluster.device
+        dp, sdp, tp = strat.dp, strat.sdp, strat.tp
+        data_deg = dp * sdp
+        b_dev = micro_batch_size / data_deg
+
+        # ---- memory: model states -------------------------------------
+        p_tp = spec.param_count * spec.tp_frac
+        p_rep = spec.param_count * (1.0 - spec.tp_frac)
+        params_dev = p_tp / tp + p_rep          # after TP sharding
+        ms = cfg.bytes_per_param_states * params_dev / sdp
+
+        # ---- memory: activations ---------------------------------------
+        bnd_dev = spec.bnd_bytes_per_sample * b_dev
+        int_dev = spec.int_bytes_per_sample * b_dev / tp
+        if tp > 1:
+            int_dev += cfg.tp_act_replicated_bnd * bnd_dev
+        if strat.ckpt:
+            mem_f = bnd_dev * inflight
+            mem_b = int_dev
+        else:
+            mem_f = (bnd_dev + int_dev) * inflight
+            mem_b = 0.0
+
+        # ---- compute time ----------------------------------------------
+        if spec.name in self.profiled_times:
+            # profiled per-sample forward time (paper: batch x per-sample)
+            comp_fwd = self.profiled_times[spec.name] * b_dev / tp
+        else:
+            flops_dev = spec.flops_per_sample * b_dev / tp
+            comp_fwd = flops_dev / (dev.peak_flops * cfg.mfu)
+        comp_bwd = 2.0 * comp_fwd
+        recompute = comp_fwd if strat.ckpt else 0.0
+
+        # ---- communication ---------------------------------------------
+        # TP: all-reduce of hidden states, twice per layer direction
+        tp_time_fwd = tp_time_bwd = 0.0
+        if tp > 1:
+            bw = self._level_bandwidth(strat, TP)
+            msg = spec.bnd_bytes_per_sample * b_dev
+            ar = 2.0 * self._ring_factor(tp) * msg / bw
+            tp_time_fwd = 2.0 * ar
+            tp_time_bwd = 2.0 * ar
+            if spec.n_experts > 1 and cfg.moe_expert_parallel_tp:
+                # token dispatch + combine all-to-all (fwd and bwd)
+                a2a = 2.0 * self._ring_factor(tp) / tp * msg * spec.top_k / bw
+                tp_time_fwd += 2.0 * a2a
+                tp_time_bwd += 2.0 * a2a
+
+        # SDP: param all-gather before fwd and before bwd (per micro-batch),
+        # grad reduce-scatter with the last micro-batch.
+        sdp_ag_fwd = sdp_ag_bwd = sdp_rs = 0.0
+        if sdp > 1:
+            bw = self._level_bandwidth(strat, SDP)
+            pbytes = cfg.bytes_per_param * params_dev  # already TP-sharded
+            sdp_ag_fwd = self._ring_factor(sdp) * pbytes / bw
+            sdp_ag_bwd = self._ring_factor(sdp) * pbytes / bw
+            sdp_rs = self._ring_factor(sdp) * pbytes / bw
+
+        # DP: grad all-reduce with the last micro-batch only.  Per the
+        # paper's Takeaway-#3 accounting, DP synchronizes the FULL
+        # (TP-sharded) gradient bytes — the all-reduce happens on unsharded
+        # gradients before any ZeRO reduce-scatter, so no /sdp here.
+        dp_ar = 0.0
+        if dp > 1:
+            bw = self._level_bandwidth(strat, DP)
+            gbytes = cfg.bytes_per_param * params_dev
+            dp_ar = 2.0 * self._ring_factor(dp) * gbytes / bw
+
+        # ---- assemble (overlap model, §V) -------------------------------
+        # forward: TP all-reduce blocks; SDP gather overlaps with compute
+        fwd = self._overlap(comp_fwd, sdp_ag_fwd) + tp_time_fwd
+        # recompute forward (CKPT) repeats TP collectives too
+        re_fwd = (self._overlap(recompute, 0.0) + tp_time_fwd) if strat.ckpt else 0.0
+        # backward: DP/SDP gradient comm overlaps with compute
+        bwd_nosync = self._overlap(comp_bwd, sdp_ag_bwd) + tp_time_bwd
+        bwd_sync = self._overlap(comp_bwd, sdp_ag_bwd + sdp_rs + dp_ar) + tp_time_bwd
+
+        return LayerCosts(
+            time=fwd + re_fwd + bwd_sync,
+            time_nosync=fwd + re_fwd + bwd_nosync,
+            mem_f=mem_f,
+            mem_b=mem_b,
+            mem_ms=ms,
+            time_fwd=fwd,
+        )
+
+    # ------------------------------------------------------------------
+    def reshard_cost(self, spec: LayerSpec, strat_to: Strategy,
+                     micro_batch_size: float) -> float:
+        """R(l, S_i, S_j): slice-gather transformation cost when the previous
+        layer used a different strategy.  Modeled as moving this layer's
+        boundary activations once across the stage's device group."""
+        n = strat_to.total
+        if n <= 1:
+            return 0.0
+        bw = self.cluster.bandwidth_for_group(n)
+        bytes_moved = spec.bnd_bytes_per_sample * micro_batch_size / n
+        return 2.0 * self._ring_factor(n) * bytes_moved / bw
+
+    # ------------------------------------------------------------------
+    def p2p_cost(self, spec: LayerSpec, micro_batch_size: float,
+                 data_deg: int) -> float:
+        """Pipeline stage-boundary activation transfer (per micro-batch)."""
+        bytes_moved = spec.bnd_bytes_per_sample * micro_batch_size / max(1, data_deg)
+        return bytes_moved / self.cluster.inter_island_bandwidth

@@ -1,0 +1,195 @@
+"""Dynamic-programming strategy search (paper §IV-A2, Appendix A).
+
+Optimizes the per-layer strategy assignment of one pipeline stage under a
+device memory budget.  Follows the paper's decomposition:
+
+  1. sweep a *forward* memory budget ``E_fwd <= E`` — the DP table is
+     computed over all quantized budgets at once (knapsack style),
+  2. for each candidate ``E_fwd`` (descending) backtrack the strategy chain
+     and verify the exact peak memory ``E_all <= E`` (Eq. 2),
+  3. the largest valid ``E_fwd`` wins; ``E_fwd <= E - b_up`` is always valid
+     (b_up = max backward peak), which bounds the scan.
+
+The transformation cost R(l, S_i, S_j) is instantiated as
+``0 if levels(S_i) == levels(S_j) else r(l, S_j)`` (resharding into layout
+S_j); this keeps the paper's claimed O(L·E·|S|) complexity (a general
+R(i,j) matrix would cost O(L·E·|S|^2)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import numpy as np
+
+from .cost_model import CostModel
+from .layerspec import LayerSpec
+from .strategy import Strategy
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class StageSearchResult:
+    feasible: bool
+    time: float                     # stage time, last micro-batch (grad sync)
+    time_nosync: float              # stage time, earlier micro-batches
+    strategies: List[Strategy]
+    e_all: float                    # exact peak memory (Eq. 2), bytes
+    e_fwd: float                    # forward memory used (Eq. 3), bytes
+    mem_states: float               # total model-state bytes per device
+
+
+def _exact_e_all(mem_f: np.ndarray, mem_b: np.ndarray, mem_ms: np.ndarray,
+                 choice: Sequence[int]) -> float:
+    """Eq. 2 with a concrete strategy chain."""
+    idx = np.arange(len(choice))
+    f = mem_f[idx, choice]
+    b = mem_b[idx, choice]
+    ms_total = mem_ms[idx, choice].sum()
+    cum_f = np.cumsum(f)
+    return float((cum_f + b).max() + ms_total) if len(choice) else 0.0
+
+
+def dp_search_stage(
+    specs: Sequence[LayerSpec],
+    strategies: Sequence[Strategy],
+    cost_model: CostModel,
+    micro_batch_size: float,
+    budget_bytes: float,
+    *,
+    inflight: int = 1,
+    n_bins: int = 256,
+    n_micro: int = 1,
+) -> StageSearchResult:
+    """Search the optimal per-layer strategies for one pipeline stage.
+
+    The DP objective is the m-amortized per-micro-batch time
+    ``t_nosync + (t_sync - t_nosync)/m`` — Eq. 9 charges the grad-sync cost
+    only on the last of ``n_micro`` micro-batches, so optimizing raw sync
+    time would mis-rank strategies with expensive gradient synchronization
+    but cheap steady-state micro-batches.
+    """
+    L, S = len(specs), len(strategies)
+    if L == 0:
+        return StageSearchResult(True, 0.0, 0.0, [], 0.0, 0.0, 0.0)
+
+    # ---- per (layer, strategy) cost tables -----------------------------
+    time = np.full((L, S), INF)       # DP objective (m-amortized)
+    time_sync = np.full((L, S), INF)  # raw last-micro-batch time
+    time_ns = np.full((L, S), INF)
+    mem_f = np.zeros((L, S))
+    mem_b = np.zeros((L, S))
+    mem_ms = np.zeros((L, S))
+    reshard = np.zeros((L, S))
+    for l, spec in enumerate(specs):
+        for j, s in enumerate(strategies):
+            c = cost_model.layer_costs(spec, s, micro_batch_size, inflight=inflight)
+            time[l, j] = c.time_nosync + (c.time - c.time_nosync) / max(1, n_micro)
+            time_sync[l, j] = c.time
+            time_ns[l, j] = c.time_nosync
+            mem_f[l, j] = c.mem_f
+            mem_b[l, j] = c.mem_b
+            mem_ms[l, j] = c.mem_ms
+            reshard[l, j] = cost_model.reshard_cost(spec, s, micro_batch_size)
+
+    # quantized forward-memory weight of each (layer, strategy)
+    bin_bytes = max(budget_bytes / n_bins, 1.0)
+    w = np.ceil((mem_f + mem_ms) / bin_bytes).astype(np.int64)   # bins
+    E = n_bins
+
+    # strategies grouped by identical levels (R == 0 within a group)
+    level_key = {}
+    group_of = np.zeros(S, dtype=np.int64)
+    for j, s in enumerate(strategies):
+        group_of[j] = level_key.setdefault(s.levels, len(level_key))
+    G = len(level_key)
+    group_members = [np.where(group_of == g)[0] for g in range(G)]
+
+    # ---- DP over (budget_bin, strategy) ---------------------------------
+    # C[e, j]: min time of layers processed so far using total fwd-mem <= e
+    # bins, with the last layer using strategy j.
+    C = np.full((E + 1, S), INF)
+    parents = np.zeros((L, E + 1, S), dtype=np.int16)
+
+    for l in range(L):
+        Cn = np.full((E + 1, S), INF)
+        if l == 0:
+            for j in range(S):
+                if w[0, j] <= E:
+                    Cn[w[0, j]:, j] = time[0, j]
+                    parents[0, :, j] = -1
+        else:
+            best_all = C.min(axis=1)                        # (E+1,)
+            arg_all = C.argmin(axis=1)                      # (E+1,)
+            best_grp = np.full((E + 1, G), INF)
+            arg_grp = np.zeros((E + 1, G), dtype=np.int64)
+            for g, members in enumerate(group_members):
+                sub = C[:, members]
+                k = sub.argmin(axis=1)
+                best_grp[:, g] = sub[np.arange(E + 1), k]
+                arg_grp[:, g] = members[k]
+            for j in range(S):
+                wj = w[l, j]
+                if wj > E:
+                    continue
+                n_src = E + 1 - wj
+                src = np.arange(0, n_src)
+                same = best_grp[src, group_of[j]]
+                cross = best_all[src] + reshard[l, j]
+                take_same = same <= cross
+                val = np.where(take_same, same, cross) + time[l, j]
+                par = np.where(take_same, arg_grp[src, group_of[j]], arg_all[src])
+                Cn[wj:, j] = val
+                parents[l, wj:, j] = par
+        C = Cn
+
+    # ---- E_fwd sweep with exact E_all validation (Alg. 3) ---------------
+    b_up = float(np.max(mem_b)) if L else 0.0    # paper's b_up (max over l, S)
+
+    final_best = C.min(axis=1)                   # per budget bin
+    final_arg = C.argmin(axis=1)
+
+    def backtrack(e_bin: int) -> Optional[List[int]]:
+        j = int(final_arg[e_bin])
+        if not np.isfinite(final_best[e_bin]):
+            return None
+        chain = [0] * L
+        e = e_bin
+        for l in range(L - 1, -1, -1):
+            chain[l] = j
+            pj = int(parents[l, e, j])
+            e = e - int(w[l, j])
+            j = pj
+        return chain
+
+    for e_bin in range(E, -1, -1):
+        if not np.isfinite(final_best[e_bin]):
+            continue
+        chain = backtrack(e_bin)
+        if chain is None:
+            continue
+        e_all = _exact_e_all(mem_f, mem_b, mem_ms, chain)
+        e_fwd_exact = float(sum(mem_f[l, chain[l]] + mem_ms[l, chain[l]]
+                                for l in range(L)))
+        if e_all <= budget_bytes or e_bin * bin_bytes <= budget_bytes - b_up:
+            idx = np.arange(L)
+            t_sync = float(time_sync[idx, chain].sum())
+            t_nosync = float(time_ns[idx, chain].sum())
+            # add reshard costs along the chain
+            extra = 0.0
+            for l in range(1, L):
+                if strategies[chain[l]].levels != strategies[chain[l - 1]].levels:
+                    extra += reshard[l, chain[l]]
+            ms_total = float(mem_ms[idx, chain].sum())
+            return StageSearchResult(
+                feasible=True,
+                time=t_sync + extra,
+                time_nosync=t_nosync + extra,
+                strategies=[strategies[j] for j in chain],
+                e_all=e_all,
+                e_fwd=e_fwd_exact,
+                mem_states=ms_total,
+            )
+
+    return StageSearchResult(False, INF, INF, [], INF, INF, 0.0)

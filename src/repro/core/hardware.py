@@ -1,0 +1,208 @@
+"""Hardware descriptions used by the Galvatron-BMW cost estimator.
+
+The paper profiles GPUs (RTX TITAN / A100 clusters); our *target* is TPU
+v5e pods.  Every constant the estimator needs is collected here so the same
+search engine reproduces the paper's GPU tables and plans for TPU pods.
+
+Bandwidths are *algorithmic* bandwidths (bytes/s available to a collective
+on one device), compute is peak dense throughput per chip.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+GB = 1024**3
+MB = 1024**2
+TFLOPS = 1e12
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    """A single accelerator."""
+
+    name: str
+    peak_flops: float            # dense (bf16/fp16) FLOP/s
+    hbm_bytes: float             # device memory capacity
+    hbm_bandwidth: float         # bytes/s
+    # Slowdown multiplier applied to BOTH compute and communication when the
+    # two overlap (paper §V measures ~1.3x on GPUs from SM contention; TPUs
+    # run collectives on dedicated ICI/DMA hardware so the factor is ~1.1).
+    overlap_slowdown: float = 1.3
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """A (possibly hierarchical) collection of identical devices.
+
+    ``intra_island_bandwidth`` is the fast interconnect (NVLink / ICI);
+    ``inter_island_bandwidth`` is the slow one (IB / PCIe / DCI).  Takeaway #1
+    puts PP across islands.  ``island_size`` devices share the fast domain.
+    """
+
+    name: str
+    device: DeviceSpec
+    n_devices: int
+    island_size: int
+    intra_island_bandwidth: float   # bytes/s per device, fast domain
+    inter_island_bandwidth: float   # bytes/s per device, slow domain
+    memory_budget: Optional[float] = None  # training budget; default = hbm
+
+    def budget(self) -> float:
+        return self.memory_budget if self.memory_budget is not None else self.device.hbm_bytes
+
+    def bandwidth_for_group(self, group_size: int) -> float:
+        """Bandwidth seen by a collective over ``group_size`` devices.
+
+        Groups that fit inside an island use the fast domain; larger groups
+        are bottlenecked by the slow domain.
+        """
+        if group_size <= self.island_size:
+            return self.intra_island_bandwidth
+        return self.inter_island_bandwidth
+
+    def with_budget(self, budget_bytes: float) -> "ClusterSpec":
+        return dataclasses.replace(self, memory_budget=budget_bytes)
+
+    def with_devices(self, n: int) -> "ClusterSpec":
+        return dataclasses.replace(self, n_devices=n)
+
+
+# --------------------------------------------------------------------------
+# Device presets
+# --------------------------------------------------------------------------
+
+RTX_TITAN = DeviceSpec(
+    name="rtx-titan-24g",
+    peak_flops=32.6 * TFLOPS,        # fp16 w/ fp32 accum tensor cores
+    hbm_bytes=24 * GB,
+    hbm_bandwidth=672e9,
+    overlap_slowdown=1.3,
+)
+
+A100_40G = DeviceSpec(
+    name="a100-40g",
+    peak_flops=312 * TFLOPS,
+    hbm_bytes=40 * GB,
+    hbm_bandwidth=1555e9,
+    overlap_slowdown=1.3,
+)
+
+A100_80G = DeviceSpec(
+    name="a100-80g",
+    peak_flops=312 * TFLOPS,
+    hbm_bytes=80 * GB,
+    hbm_bandwidth=2039e9,
+    overlap_slowdown=1.3,
+)
+
+# The TARGET: TPU v5e.  Constants given by the task spec:
+# 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+TPU_V5E = DeviceSpec(
+    name="tpu-v5e",
+    peak_flops=197 * TFLOPS,
+    hbm_bytes=16 * GB,
+    hbm_bandwidth=819e9,
+    overlap_slowdown=1.1,
+)
+
+TPU_PEAK_FLOPS = TPU_V5E.peak_flops
+TPU_HBM_BW = TPU_V5E.hbm_bandwidth
+TPU_ICI_BW = 50e9  # bytes/s per link
+
+
+# --------------------------------------------------------------------------
+# Cluster presets (paper evaluation environments + TPU targets)
+# --------------------------------------------------------------------------
+
+def paper_8gpu() -> ClusterSpec:
+    """Single node, 8x RTX TITAN on PCIe 3.0 (paper §VII-A)."""
+    return ClusterSpec(
+        name="8x-rtx-titan-pcie",
+        device=RTX_TITAN,
+        n_devices=8,
+        island_size=8,
+        intra_island_bandwidth=12e9,     # PCIe 3.0 x16 effective
+        inter_island_bandwidth=12e9,
+    )
+
+
+def paper_16gpu_low() -> ClusterSpec:
+    """2 nodes x 8 RTX TITAN, 100Gb IB across (low-perf cluster)."""
+    return ClusterSpec(
+        name="16x-rtx-titan-ib100",
+        device=RTX_TITAN,
+        n_devices=16,
+        island_size=8,
+        intra_island_bandwidth=12e9,
+        inter_island_bandwidth=10e9,     # 100 Gb/s ≈ 10 GB/s after overhead
+    )
+
+
+def paper_16gpu_high() -> ClusterSpec:
+    """2 nodes x 8 A100-NVLink, 100Gb IB across (high-perf cluster)."""
+    return ClusterSpec(
+        name="16x-a100-nvlink-ib100",
+        device=A100_40G,
+        n_devices=16,
+        island_size=8,
+        intra_island_bandwidth=300e9,    # NVLink3 per-GPU algorithmic
+        inter_island_bandwidth=10e9,
+    )
+
+
+def paper_64gpu() -> ClusterSpec:
+    """8 nodes x 8 A100-40G NVLink, 100Gb IB (Table IV)."""
+    return ClusterSpec(
+        name="64x-a100-nvlink-ib100",
+        device=A100_40G,
+        n_devices=64,
+        island_size=8,
+        intra_island_bandwidth=300e9,
+        inter_island_bandwidth=10e9,
+    )
+
+
+def paper_32gpu_80g() -> ClusterSpec:
+    """4 nodes x 8 A100-80G, 400Gb IB (Table VI, GPT-3 runs)."""
+    return ClusterSpec(
+        name="32x-a100-80g-ib400",
+        device=A100_80G,
+        n_devices=32,
+        island_size=8,
+        intra_island_bandwidth=300e9,
+        inter_island_bandwidth=40e9,
+    )
+
+
+def tpu_v5e_pod(n_chips: int = 256) -> ClusterSpec:
+    """One v5e pod: 2D torus, ICI everywhere."""
+    # A v5e chip has 4 ICI links; algorithmic per-device collective bandwidth
+    # on the torus ≈ 2 links usable per logical ring direction.
+    return ClusterSpec(
+        name=f"tpu-v5e-pod-{n_chips}",
+        device=TPU_V5E,
+        n_devices=n_chips,
+        island_size=n_chips,
+        intra_island_bandwidth=2 * TPU_ICI_BW,
+        inter_island_bandwidth=2 * TPU_ICI_BW,
+    )
+
+
+def tpu_v5e_multipod(n_pods: int = 2, chips_per_pod: int = 256) -> ClusterSpec:
+    """Multiple v5e pods over data-center interconnect."""
+    return ClusterSpec(
+        name=f"tpu-v5e-{n_pods}x{chips_per_pod}",
+        device=TPU_V5E,
+        n_devices=n_pods * chips_per_pod,
+        island_size=chips_per_pod,
+        intra_island_bandwidth=2 * TPU_ICI_BW,
+        inter_island_bandwidth=6.25e9,   # ~50 Gb/s effective DCI per chip-pair
+    )
+
+
+CLUSTERS: Dict[str, "ClusterSpec"] = {}
+for _f in (paper_8gpu, paper_16gpu_low, paper_16gpu_high, paper_64gpu,
+           paper_32gpu_80g, tpu_v5e_pod, tpu_v5e_multipod):
+    _c = _f()
+    CLUSTERS[_c.name] = _c

@@ -1,0 +1,315 @@
+"""Parallelism optimization framework (paper §IV, Algorithms 1 & 2).
+
+``GalvatronOptimizer`` implements:
+  * Galvatron-Base (Alg. 1): batch-size sweep x PP-degree sweep x
+    micro-batch choice x per-stage DP search, with an ideally (memory-)
+    balanced pipeline partition;
+  * Galvatron-BMW (Alg. 2): the bi-objective workload-balance refinement —
+    queue of partitions seeded with the memory-balanced plan p_m, greedy
+    boundary-layer adjustment, 3-criterion validation (Eq. 7/8 invariants).
+
+Baseline modes (pure DP/SDP/TP/PP, DP+TP, DP+PP, DeepSpeed-3D-style fixed
+strategies, no-CKPT variants) are expressed through the constructor knobs so
+every row of the paper's tables is produced by this one class.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time as _time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .cost_model import CostModel, CostModelConfig
+from .decision_tree import SearchSpace, construct_search_space
+from .dp_search import dp_search_stage
+from .hardware import ClusterSpec
+from .layerspec import LayerSpec
+from .pipeline_balance import (PartitionEval, adjust_partition,
+                               balance_degrees, inflight_microbatches,
+                               memory_balanced_partition, stage_bounds,
+                               time_balanced_partition,
+                               validate_adjustment)
+from .plan import ParallelPlan
+from .strategy import PARADIGMS, Strategy
+
+INF = float("inf")
+
+
+@dataclasses.dataclass
+class OptimizerConfig:
+    paradigms: Sequence[str] = PARADIGMS      # which of DP/SDP/TP to search
+    allow_ckpt: bool = True
+    use_pp: bool = True                        # False => PP degree fixed to 1
+    bi_objective: bool = True                  # BMW partition refinement
+    schedule: str = "1f1b"                     # or "gpipe"
+    max_pp: Optional[int] = None
+    max_tp: Optional[int] = None
+    # batch-size exploration grid (Alg. 1 line 2 increments B; we use a
+    # geometric+linear grid and stop after everything OOMs)
+    batch_grid: Optional[Sequence[int]] = None
+    max_batch: int = 4096
+    micro_candidates: int = 8                  # how many micro-batch counts to try
+    n_bins: int = 256                          # DP memory quantization
+    fixed_strategy: Optional[Strategy] = None  # pure-baseline mode
+    fixed_pp: Optional[int] = None
+    max_adjust_iters: int = 32                 # BMW queue budget per (B, P)
+
+
+def default_batch_grid(max_batch: int) -> List[int]:
+    grid, b = [], 8
+    while b <= max_batch:
+        grid.append(b)
+        b = b + max(8, b // 2)
+    return grid
+
+
+class GalvatronOptimizer:
+    def __init__(self, specs: Sequence[LayerSpec], cluster: ClusterSpec,
+                 config: Optional[OptimizerConfig] = None,
+                 cost_config: Optional[CostModelConfig] = None,
+                 profiled_times: Optional[Dict[str, float]] = None):
+        self.specs = list(specs)
+        self.cluster = cluster
+        self.cfg = config or OptimizerConfig()
+        self.cost = CostModel(cluster, cost_config,
+                              profiled_times=profiled_times)
+        self.search_space = construct_search_space(
+            cluster.n_devices,
+            paradigms=self.cfg.paradigms,
+            allow_ckpt=self.cfg.allow_ckpt,
+            max_pp=(1 if not self.cfg.use_pp else self.cfg.max_pp),
+            max_tp=self.cfg.max_tp,
+        )
+        self.stats: Dict[str, float] = {"stage_searches": 0, "search_seconds": 0.0}
+
+    # ------------------------------------------------------------------
+    # layer-level reference costs (used for initial partitions)
+    # ------------------------------------------------------------------
+    def _reference_layer_costs(self, micro_batch: float,
+                               group: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-layer (time, act-memory) under a cheap reference strategy —
+        pure data parallel over the stage group (paper's load-balancing
+        guideline: #layers/params/exec-time)."""
+        ref = Strategy((("dp", group),)) if group > 1 else Strategy(())
+        t = np.zeros(len(self.specs))
+        m = np.zeros(len(self.specs))
+        for i, s in enumerate(self.specs):
+            c = self.cost.layer_costs(s, ref, micro_batch)
+            t[i] = c.time_nosync
+            m[i] = c.mem_f + c.mem_ms
+        return t, m
+
+    # ------------------------------------------------------------------
+    # per-(B, P, m, partition) evaluation == Galvatron_Search (Alg. 1 l.17)
+    # ------------------------------------------------------------------
+    def _eval_partition(self, partition: Sequence[int], B: int, m: int,
+                        P: int) -> Tuple[float, PartitionEval, List[Strategy]]:
+        budget = self.cluster.budget()
+        B_m = B / m
+        strategies = self.search_space.strategies(P)
+        if self.cfg.fixed_strategy is not None:
+            strategies = [self.cfg.fixed_strategy]
+        bounds = stage_bounds(partition)
+        stage_times, stage_ns, stage_mems, all_strats = [], [], [], []
+        feasible = True
+        for i, (a, b) in enumerate(bounds):
+            infl = inflight_microbatches(i, P, m, self.cfg.schedule)
+            res = dp_search_stage(self.specs[a:b], strategies, self.cost,
+                                  B_m, budget, inflight=infl,
+                                  n_bins=self.cfg.n_bins, n_micro=m)
+            self.stats["stage_searches"] += 1
+            if not res.feasible:
+                feasible = False
+                stage_times.append(INF)
+                stage_ns.append(INF)
+                stage_mems.append(INF)
+                all_strats.extend([Strategy(())] * (b - a))
+                continue
+            p2p = 0.0
+            if P > 1 and b < len(self.specs):
+                dd = res.strategies[-1].data_degree if res.strategies else 1
+                p2p = self.cost.p2p_cost(self.specs[b - 1], B_m, dd)
+            stage_times.append(res.time + p2p)
+            stage_ns.append(res.time_nosync + p2p)
+            stage_mems.append(res.e_all)
+            all_strats.extend(res.strategies)
+        ev = PartitionEval(list(partition), stage_times, stage_ns,
+                           stage_mems, feasible)
+        if not feasible:
+            return INF, ev, all_strats
+        # Eq. 9: (m-1) * slowest no-sync stage + sum of sync stage times
+        iter_time = (m - 1) * max(stage_ns) + sum(stage_times)
+        return iter_time, ev, all_strats
+
+    # ------------------------------------------------------------------
+    def _micro_candidates(self, B: int, P: int) -> List[int]:
+        cands = []
+        m = max(1, P)  # at least P micro-batches to fill a pipeline
+        while m <= B and len(cands) < self.cfg.micro_candidates:
+            if B % m == 0:
+                cands.append(m)
+            m *= 2
+        if not cands:
+            cands = [B]
+        return cands
+
+    # ------------------------------------------------------------------
+    def _search_pp(self, B: int, P: int) -> Optional[ParallelPlan]:
+        """Best plan for one (batch, PP degree): Alg. 1 inner body, plus the
+        Alg. 2 partition-adjustment queue when bi_objective is on."""
+        L = len(self.specs)
+        if P > L:
+            return None
+        best: Optional[ParallelPlan] = None
+        for m in self._micro_candidates(B, P):
+            B_m = B / m
+            group = self.cluster.n_devices // P
+            t_ref, m_ref = self._reference_layer_costs(B_m, group)
+            if P == 1:
+                partitions = [[L]]
+                pt_max_mem = INF
+            else:
+                p_m = memory_balanced_partition(m_ref, P, m, self.cfg.schedule)
+                p_t = time_balanced_partition(t_ref, P)
+                # pt_max_mem: criterion (3) reference — max stage memory
+                # under the time-balanced partition
+                _, ev_t, _ = self._eval_partition(p_t, B, m, P)
+                pt_max_mem = max(ev_t.stage_mems) if ev_t.feasible else INF
+                # Alg. 2 seeds the queue with p_m and adjusts toward p_t;
+                # p_t itself is also evaluated (the optimum lies between the
+                # two extremes, Eq. 7).
+                partitions = [p_m, p_t]
+            queue = list(partitions)
+            seen = {tuple(p) for p in queue}
+            iters = 0
+            while queue and iters <= self.cfg.max_adjust_iters:
+                part = queue.pop(0)
+                iters += 1
+                t, ev, strats = self._eval_partition(part, B, m, P)
+                if ev.feasible and t < INF:
+                    if best is None or B / t > best.est_throughput:
+                        a_t, a_m = balance_degrees(ev.stage_times, ev.stage_mems)
+                        best = ParallelPlan(
+                            n_devices=self.cluster.n_devices,
+                            pp_degree=P, partition=list(part),
+                            strategies=strats, global_batch=B, n_micro=m,
+                            schedule=self.cfg.schedule,
+                            est_iter_time=t, est_throughput=B / t,
+                            est_stage_mem=ev.stage_mems,
+                            alpha_t=a_t, alpha_m=a_m)
+                    if self.cfg.bi_objective and P > 1:
+                        for cand in adjust_partition(part, ev.stage_times):
+                            key = tuple(cand)
+                            if key in seen:
+                                continue
+                            t2, ev2, _ = self._eval_partition(cand, B, m, P)
+                            if validate_adjustment(
+                                    ev2, max(ev.stage_times),
+                                    self.cluster.budget(), pt_max_mem):
+                                seen.add(key)
+                                queue.append(cand)
+        return best
+
+    # ------------------------------------------------------------------
+    def optimize(self, verbose: bool = False) -> Optional[ParallelPlan]:
+        """Alg. 1 / Alg. 2 top level: sweep batch sizes, keep best Tpt."""
+        t0 = _time.time()
+        grid = list(self.cfg.batch_grid or default_batch_grid(self.cfg.max_batch))
+        best: Optional[ParallelPlan] = None
+        consecutive_oom = 0
+        pp_degrees = ([self.cfg.fixed_pp] if self.cfg.fixed_pp
+                      else sorted(self.search_space.per_pp))
+        for B in grid:
+            found = False
+            for P in pp_degrees:
+                if P is None or self.cluster.n_devices % P:
+                    continue
+                plan = self._search_pp(B, P)
+                if plan is None:
+                    continue
+                found = True
+                if best is None or plan.est_throughput > best.est_throughput:
+                    best = plan
+                    if verbose:
+                        print(f"[B={B} P={P}] tpt={plan.est_throughput:.2f} "
+                              f"{plan.summary()}")
+            consecutive_oom = 0 if found else consecutive_oom + 1
+            if consecutive_oom >= 2:     # everything OOMs: stop enlarging B
+                break
+        self.stats["search_seconds"] = _time.time() - t0
+        return best
+
+
+# --------------------------------------------------------------------------
+# convenience constructors for the paper's baselines
+# --------------------------------------------------------------------------
+
+def pure_baseline(kind: str, n_devices: int) -> OptimizerConfig:
+    """PyTorch-DDP / Megatron-TP / GPipe-PP / FSDP-SDP single-paradigm rows."""
+    if kind == "dp":
+        return OptimizerConfig(fixed_strategy=Strategy((("dp", n_devices),)),
+                               fixed_pp=1, allow_ckpt=False, use_pp=False,
+                               bi_objective=False)
+    if kind == "sdp":
+        return OptimizerConfig(fixed_strategy=Strategy((("sdp", n_devices),)),
+                               fixed_pp=1, allow_ckpt=False, use_pp=False,
+                               bi_objective=False)
+    if kind == "tp":
+        return OptimizerConfig(fixed_strategy=Strategy((("tp", n_devices),)),
+                               fixed_pp=1, allow_ckpt=False, use_pp=False,
+                               bi_objective=False)
+    if kind == "pp":
+        return OptimizerConfig(fixed_strategy=Strategy(()),
+                               fixed_pp=n_devices, allow_ckpt=False,
+                               bi_objective=False, schedule="gpipe")
+    raise ValueError(kind)
+
+
+def deepspeed_3d(n_devices: int) -> OptimizerConfig:
+    """Expert-designed fixed 3D strategy: 2-way DP x 2-way TP x 2-way PP
+    scaled to the device count (officially suggested global combination)."""
+    pp = 2
+    rest = n_devices // pp
+    tp = 2
+    dp = rest // tp
+    levels = []
+    if dp > 1:
+        levels.append(("dp", dp))
+    if tp > 1:
+        levels.append(("tp", tp))
+    return OptimizerConfig(fixed_strategy=Strategy(tuple(levels)),
+                           fixed_pp=pp, allow_ckpt=False, bi_objective=False)
+
+
+def galvatron_variant(kind: str) -> OptimizerConfig:
+    """'dp+tp' / 'dp+pp' / 'galvatron' (4-dim, no CKPT) / 'base' (5-dim) /
+    '1f1b-biobj' (4-dim + balance) / 'bmw' (everything)."""
+    if kind == "dp+tp":
+        return OptimizerConfig(paradigms=("dp", "tp"), allow_ckpt=False,
+                               use_pp=False, bi_objective=False)
+    if kind == "dp+pp":
+        return OptimizerConfig(paradigms=("dp",), allow_ckpt=False,
+                               use_pp=True, bi_objective=False)
+    if kind == "galvatron":
+        return OptimizerConfig(allow_ckpt=False, bi_objective=False)
+    if kind == "base":
+        return OptimizerConfig(allow_ckpt=True, bi_objective=False)
+    if kind == "1f1b-biobj":
+        return OptimizerConfig(allow_ckpt=False, bi_objective=True)
+    if kind == "bmw":
+        return OptimizerConfig(allow_ckpt=True, bi_objective=True)
+    raise ValueError(kind)
+
+
+def alpa_like() -> "OptimizerConfig":
+    """Alpa-style baseline (paper Table VI): automatic inter-op (PP) +
+    intra-op parallelism, but SDP is a global either/or choice (no per-layer
+    DP/SDP mixing) and activation checkpointing is not searched."""
+    return OptimizerConfig(paradigms=("dp", "tp"), allow_ckpt=False,
+                           bi_objective=False)
+
+
+def alpa_like_sdp() -> "OptimizerConfig":
+    return OptimizerConfig(paradigms=("sdp", "tp"), allow_ckpt=False,
+                           bi_objective=False)

@@ -1,0 +1,146 @@
+"""Pipeline workload balance (paper §IV-B).
+
+1F1B-Flush keeps ``P - i`` micro-batches in flight on (0-indexed) stage
+``i``, so shallower stages hold more activation memory — the memory workload
+is imbalanced even when the time workload is perfect.  This module provides:
+
+  * balance degrees α_t / α_m (Eq. 6),
+  * extreme partitions p_t (time-balanced) and p_m (memory-balanced),
+  * the greedy boundary-layer adjustment + the 3-criterion validation of
+    §IV-B2 (every accepted partition satisfies Eq. 7/8).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+INF = float("inf")
+
+
+def inflight_microbatches(stage: int, n_stages: int, n_micro: int,
+                          schedule: str = "1f1b") -> int:
+    """Number of in-flight micro-batch activation sets on one stage."""
+    if schedule == "gpipe":
+        return n_micro
+    # 1F1B-flush: stage i (0-indexed) warms up P - i micro-batches
+    return min(n_stages - stage, n_micro)
+
+
+def stage_bounds(partition: Sequence[int]) -> List[Tuple[int, int]]:
+    """[(start, end)) layer index ranges of each stage."""
+    out, s = [], 0
+    for p in partition:
+        out.append((s, s + p))
+        s += p
+    return out
+
+
+def balance_degrees(stage_times: Sequence[float],
+                    stage_mems: Sequence[float]) -> Tuple[float, float]:
+    """α_t, α_m of Eq. 6."""
+    t, m = np.asarray(stage_times, float), np.asarray(stage_mems, float)
+    a_t = 1.0 - t.max() / t.sum() if t.sum() > 0 else 0.0
+    a_m = 1.0 - m.max() / m.sum() if m.sum() > 0 else 0.0
+    return float(a_t), float(a_m)
+
+
+def _partition_minimize_max(loads: np.ndarray, P: int,
+                            stage_weight=None) -> List[int]:
+    """Contiguous partition of ``loads`` into P parts minimizing the maximum
+    (optionally stage-weighted) part sum.  O(P * L^2) DP — exact.
+
+    ``stage_weight(i)`` multiplies the load of stage i (used for 1F1B
+    in-flight activation weighting when balancing memory).
+    """
+    L = len(loads)
+    prefix = np.concatenate([[0.0], np.cumsum(loads)])
+
+    def seg(a: int, b: int, stage: int) -> float:
+        w = stage_weight(stage) if stage_weight else 1.0
+        return (prefix[b] - prefix[a]) * w
+
+    # dp[i][l] = min over partitions of first l layers into i+1 stages of max load
+    dp = np.full((P, L + 1), INF)
+    cut = np.zeros((P, L + 1), dtype=np.int64)
+    for l in range(1, L + 1):
+        dp[0, l] = seg(0, l, 0)
+    for i in range(1, P):
+        for l in range(i + 1, L + 1):
+            best, bestk = INF, i
+            for k in range(i, l):
+                v = max(dp[i - 1, k], seg(k, l, i))
+                if v < best:
+                    best, bestk = v, k
+            dp[i, l] = best
+            cut[i, l] = bestk
+    # backtrack
+    parts = []
+    l = L
+    for i in range(P - 1, 0, -1):
+        k = int(cut[i, l])
+        parts.append(l - k)
+        l = k
+    parts.append(l)
+    parts.reverse()
+    return parts
+
+
+def time_balanced_partition(layer_times: Sequence[float], P: int) -> List[int]:
+    return _partition_minimize_max(np.asarray(layer_times, float), P)
+
+
+def memory_balanced_partition(layer_mems: Sequence[float], P: int,
+                              n_micro: int, schedule: str = "1f1b") -> List[int]:
+    """Balance act-memory × 1F1B in-flight weight across stages."""
+    return _partition_minimize_max(
+        np.asarray(layer_mems, float), P,
+        stage_weight=lambda i: inflight_microbatches(i, P, n_micro, schedule))
+
+
+def adjust_partition(partition: Sequence[int],
+                     stage_times: Sequence[float]) -> List[List[int]]:
+    """Greedy adjustment (§IV-B2): shed a boundary layer from the slowest
+    stage to its adjacent stage(s).  Returns candidate new partitions."""
+    p = list(partition)
+    P = len(p)
+    slow = int(np.argmax(stage_times))
+    candidates = []
+    if p[slow] > 1:
+        if slow > 0:
+            q = list(p)
+            q[slow] -= 1
+            q[slow - 1] += 1
+            candidates.append(q)
+        if slow < P - 1:
+            q = list(p)
+            q[slow] -= 1
+            q[slow + 1] += 1
+            candidates.append(q)
+    return candidates
+
+
+@dataclasses.dataclass
+class PartitionEval:
+    partition: List[int]
+    stage_times: List[float]        # per-stage C(M_i, B_m) (sync variant)
+    stage_times_nosync: List[float]
+    stage_mems: List[float]
+    feasible: bool
+
+
+def validate_adjustment(new: PartitionEval, prev_max_time: float,
+                        budget: float, pt_max_mem: float) -> bool:
+    """The three §IV-B2 criteria: (1) no stage slower than the previous
+    maximum, (2) all stages within budget, (3) no stage above the
+    time-balanced partition's maximum memory."""
+    if not new.feasible:
+        return False
+    if max(new.stage_times) > prev_max_time + 1e-12:
+        return False
+    if max(new.stage_mems) > budget:
+        return False
+    if max(new.stage_mems) > pt_max_mem + 1e-6:
+        return False
+    return True

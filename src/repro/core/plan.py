@@ -1,0 +1,95 @@
+"""Serializable parallelism plan — the output of the Galvatron-BMW search
+and the input of the execution runtime."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Optional
+
+from .strategy import Strategy
+
+
+@dataclasses.dataclass
+class ParallelPlan:
+    """A complete distributed-execution plan for one model + cluster."""
+
+    n_devices: int
+    pp_degree: int
+    partition: List[int]                 # layers per pipeline stage
+    strategies: List[Strategy]           # one per layer (concatenated stages)
+    global_batch: int
+    n_micro: int
+    schedule: str = "1f1b"
+
+    # estimator outputs (filled by the search)
+    est_iter_time: float = 0.0
+    est_throughput: float = 0.0          # samples / s
+    est_stage_mem: Optional[List[float]] = None
+    alpha_t: float = 0.0
+    alpha_m: float = 0.0
+    searched_by: str = "galvatron-bmw"
+
+    @property
+    def micro_batch_size(self) -> int:
+        return max(1, self.global_batch // self.n_micro)
+
+    def stage_strategies(self, stage: int) -> List[Strategy]:
+        start = sum(self.partition[:stage])
+        return self.strategies[start:start + self.partition[stage]]
+
+    def summary(self) -> str:
+        segs: List[str] = []
+        run, prev = 0, None
+        for s in self.strategies + [None]:
+            name = s.name() if s is not None else None
+            if name == prev:
+                run += 1
+                continue
+            if prev is not None:
+                segs.append(f"{prev} x{run}")
+            prev, run = name, 1
+        return (f"pp{self.pp_degree} p={self.partition} B={self.global_batch} "
+                f"m={self.n_micro} | " + ", ".join(segs))
+
+    # ---- (de)serialization ----------------------------------------------
+    def to_json(self) -> Dict:
+        return {
+            "n_devices": self.n_devices,
+            "pp_degree": self.pp_degree,
+            "partition": self.partition,
+            "strategies": [s.to_json() for s in self.strategies],
+            "global_batch": self.global_batch,
+            "n_micro": self.n_micro,
+            "schedule": self.schedule,
+            "est_iter_time": self.est_iter_time,
+            "est_throughput": self.est_throughput,
+            "est_stage_mem": self.est_stage_mem,
+            "alpha_t": self.alpha_t,
+            "alpha_m": self.alpha_m,
+            "searched_by": self.searched_by,
+        }
+
+    def dumps(self) -> str:
+        return json.dumps(self.to_json(), indent=2)
+
+    @staticmethod
+    def from_json(d: Dict) -> "ParallelPlan":
+        return ParallelPlan(
+            n_devices=d["n_devices"],
+            pp_degree=d["pp_degree"],
+            partition=list(d["partition"]),
+            strategies=[Strategy.from_json(s) for s in d["strategies"]],
+            global_batch=d["global_batch"],
+            n_micro=d["n_micro"],
+            schedule=d.get("schedule", "1f1b"),
+            est_iter_time=d.get("est_iter_time", 0.0),
+            est_throughput=d.get("est_throughput", 0.0),
+            est_stage_mem=d.get("est_stage_mem"),
+            alpha_t=d.get("alpha_t", 0.0),
+            alpha_m=d.get("alpha_m", 0.0),
+            searched_by=d.get("searched_by", "galvatron-bmw"),
+        )
+
+    @staticmethod
+    def loads(s: str) -> "ParallelPlan":
+        return ParallelPlan.from_json(json.loads(s))

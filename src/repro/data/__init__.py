@@ -1,0 +1,5 @@
+from .pipeline import (DataConfig, synthetic_lm_batches, text_corpus_batches,
+                       batch_specs)
+
+__all__ = ["DataConfig", "synthetic_lm_batches", "text_corpus_batches",
+           "batch_specs"]

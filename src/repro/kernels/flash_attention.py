@@ -1,0 +1,108 @@
+"""Blocked flash attention for TPU (Pallas), GQA + causal + sliding window.
+
+TPU adaptation notes (vs the CUDA flash-attention algorithm):
+  * blocking is VMEM-resident: the q block (block_q x dh) and this
+    (batch, head)'s full K/V panels are staged in VMEM by BlockSpec; the
+    online-softmax loop walks K/V in ``block_k`` slices with MXU-friendly
+    (128-multiple) tile shapes,
+  * running max/sum are rank-2 (block_q, 1) fp32 — TPU VREGs want >=2D,
+  * no warp-level shuffles: the reduction happens in-register per block,
+    which is the natural systolic-array formulation.
+
+Context beyond ~8k per device should arrive already sequence-sharded
+(GSPMD), each shard calling this kernel on its local panel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
+                  window: Optional[int], block_q: int, block_k: int,
+                  seq_k: int):
+    # q_ref: (block_q, dh); k_ref/v_ref: (seq_k, dh); o_ref: (block_q, dh)
+    iq = pl.program_id(2)
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    n_k = seq_k // block_k
+
+    def body(ik, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (pl.dslice(ik * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(ik * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T                       # (bq, bk)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    dh = q_ref.shape[-1]
+    init = (jnp.zeros((block_q, dh), jnp.float32),
+            jnp.full((block_q, 1), NEG_INF, jnp.float32),
+            jnp.zeros((block_q, 1), jnp.float32))
+    if causal:
+        # only walk K blocks that can intersect this q block
+        hi = jnp.minimum(n_k, (iq + 1) * block_q // block_k + 1)
+    else:
+        hi = n_k
+    lo = 0
+    if window is not None:
+        lo = jnp.maximum(0, (iq * block_q - window) // block_k)
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, init)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,S,H,dh); k/v (B,T,KV,dh) -> (B,S,H,dh)."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+
+    grid = (B, H, S // block_q)
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / (dh ** 0.5), causal=causal, window=window,
+        block_q=block_q, block_k=block_k, seq_k=T)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, block_q, None, dh),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, T, None, dh),
+                         lambda b, h, i, G=G: (b, 0, h // G, 0)),
+            pl.BlockSpec((None, T, None, dh),
+                         lambda b, h, i, G=G: (b, 0, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, None, dh),
+                               lambda b, h, i: (b, i, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

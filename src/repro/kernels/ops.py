@@ -1,0 +1,38 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On non-TPU backends (this CPU container) the kernels execute with
+``interpret=True`` — the kernel body runs step-by-step on CPU, validating
+BlockSpec indexing and the numerical algorithm against ``ref.py``.
+On TPU the same call sites compile to Mosaic.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from . import flash_attention as _fa
+from . import rmsnorm as _rn
+from . import ssd_scan as _ssd
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64):
+    return _ssd.ssd_scan(x, dt, A, Bm, Cm, chunk=chunk,
+                         interpret=_interpret())
+
+
+def rmsnorm(x, w, *, eps: float = 1e-6, block_rows: int = 256):
+    return _rn.rmsnorm(x, w, eps=eps, block_rows=block_rows,
+                       interpret=_interpret())

@@ -1,0 +1,86 @@
+"""Mamba2 SSD chunked scan as a Pallas TPU kernel.
+
+Grid: one program per (batch, head).  The program walks the sequence in
+``chunk``-sized tiles, carrying the (head_dim x state) SSM state in a VMEM
+scratch buffer.  Each chunk does the quadratic intra-chunk part on the MXU
+(chunk x chunk matmul) and one state update — the same decomposition as the
+paper's SSD algorithm, re-tiled for VMEM instead of CUDA shared memory.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, o_ref, state_ref, *,
+                chunk: int, seq: int):
+    # x (S,P) dt (S,1) a (1,1) b (S,N) c (S,N) out (S,P); scratch (P,N)
+    P = x_ref.shape[-1]
+    N = b_ref.shape[-1]
+    state_ref[...] = jnp.zeros((P, N), jnp.float32)
+    a = a_ref[0].astype(jnp.float32)   # block (None, 1) -> shape (1,)
+    n_chunks = seq // chunk
+
+    def body(ci, _):
+        sl = pl.dslice(ci * chunk, chunk)
+        x = pl.load(x_ref, (sl, slice(None))).astype(jnp.float32)   # (Q,P)
+        dt = pl.load(dt_ref, (sl, slice(None))).astype(jnp.float32)  # (Q,1)
+        bm = pl.load(b_ref, (sl, slice(None))).astype(jnp.float32)  # (Q,N)
+        cm = pl.load(c_ref, (sl, slice(None))).astype(jnp.float32)  # (Q,N)
+
+        dA = dt[:, 0] * a                                  # (Q,) negative
+        cum = jnp.cumsum(dA)                               # inclusive
+        # intra-chunk quadratic part
+        cb = cm @ bm.T                                     # (Q,Q)
+        delta = cum[:, None] - cum[None, :]
+        iq = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+        ik = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+        decay = jnp.exp(jnp.where(iq >= ik, delta, -1e30))
+        m = cb * decay * dt[:, 0][None, :]
+        y = m @ x                                          # (Q,P)
+        # contribution of the carried state
+        state = state_ref[...]
+        y += jnp.exp(cum)[:, None] * (cm @ state.T)        # (Q,N)@(N,P)
+        # state update
+        decay_to_end = jnp.exp(cum[-1] - cum)              # (Q,)
+        upd = (bm * (decay_to_end * dt[:, 0])[:, None]).T @ x   # (N,Q)@(Q,P)
+        state_ref[...] = state * jnp.exp(cum[-1]) + upd.T  # (P,N)
+        pl.store(o_ref, (sl, slice(None)), y.astype(o_ref.dtype))
+        return 0
+
+    jax.lax.fori_loop(0, n_chunks, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+             Cm: jax.Array, *, chunk: int = 64,
+             interpret: bool = False) -> jax.Array:
+    """x (B,S,H,P); dt (B,S,H); A (H,); Bm/Cm (B,S,H,N) -> y (B,S,H,P)."""
+    B, S, H, P = x.shape
+    N = Bm.shape[-1]
+    assert S % chunk == 0
+
+    grid = (B, H)
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, seq=S)
+    dt4 = dt[..., None]                       # (B,S,H,1)
+    a2 = A.reshape(H, 1)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, S, None, P), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((None, S, None, 1), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((None, 1), lambda b, h: (h, 0)),
+            pl.BlockSpec((None, S, None, N), lambda b, h: (b, 0, h, 0)),
+            pl.BlockSpec((None, S, None, N), lambda b, h: (b, 0, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, S, None, P), lambda b, h: (b, 0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.VMEM((P, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt4, a2, Bm, Cm)

@@ -1,0 +1,46 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input of
+every (architecture x input shape), weak-type-correct and shardable, with
+zero device allocation."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import INPUT_SHAPES, InputShape, ModelConfig
+
+# sliding-window span used to make `long_500k` sub-quadratic on attention
+# architectures (dense/moe/vlm/audio); SSM/hybrid run it natively.
+LONG_CONTEXT_WINDOW = 8192
+
+
+def config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    """Per-shape model adjustments (DESIGN.md §4)."""
+    if (shape.name == "long_500k" and cfg.arch_type not in ("ssm", "hybrid")
+            and cfg.sliding_window is None):
+        return cfg.with_(sliding_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """Batch inputs for train/prefill modes."""
+    B, S = shape.global_batch, shape.seq_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+    }
+    if cfg.arch_type == "vlm":
+        out["patches"] = jax.ShapeDtypeStruct(
+            (B, cfg.vision_tokens, cfg.d_vision), jnp.float32)
+    if cfg.is_encoder_decoder:
+        out["frames"] = jax.ShapeDtypeStruct(
+            (B, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if shape.mode != "train":
+        out.pop("labels")
+    return out
+
+
+def decode_dims(cfg: ModelConfig, shape: InputShape) -> Tuple[int, int]:
+    """(batch, kv-context) for decode shapes."""
+    return shape.global_batch, shape.seq_len

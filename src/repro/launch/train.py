@@ -1,0 +1,114 @@
+"""Training driver: Galvatron-searched plan -> sharded training run.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-4b --reduced \\
+        --steps 100 --batch 8 --seq 128
+
+On this CPU container the driver runs reduced configs on the local device
+mesh; on a real pod the same entry point takes the production mesh and the
+full config (the dry-run proves those lower).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.configs.specs import layerspecs_for
+from repro.core import (GalvatronOptimizer, ParallelPlan, galvatron_variant,
+                        tpu_v5e_pod)
+from repro.data import DataConfig, batch_specs, synthetic_lm_batches, text_corpus_batches
+from repro.checkpointing import save_train_state
+from repro.launch.mesh import make_local_mesh
+from repro.optim import AdamWConfig
+from repro.runtime import ShardPolicy, init_train_state, make_train_step
+
+
+def search_plan(cfg, seq_len: int, n_devices: int = 64) -> ParallelPlan:
+    specs = layerspecs_for(cfg, seq_len)
+    ocfg = galvatron_variant("bmw")
+    ocfg.batch_grid = [64, 128, 256]
+    ocfg.n_bins = 96
+    ocfg.micro_candidates = 2
+    ocfg.max_pp = 4
+    plan = GalvatronOptimizer(specs, tpu_v5e_pod(n_devices), ocfg).optimize()
+    if plan is None:
+        raise RuntimeError("no feasible plan")
+    return plan
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list_archs(), default="qwen3-4b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--layers", type=int, default=None)
+    ap.add_argument("--d-model", type=int, default=None)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--corpus", default=None, help="text file (byte-level LM)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--plan-out", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced(n_layers=args.layers or 2,
+                          d_model=args.d_model or 256)
+    elif args.layers or args.d_model:
+        cfg = cfg.with_(n_layers=args.layers or cfg.n_layers,
+                        d_model=args.d_model or cfg.d_model)
+
+    # 1) the paper's engine searches the plan (for the target pod)
+    plan = search_plan(cfg, args.seq)
+    print("searched plan:", plan.summary())
+    if args.plan_out:
+        pathlib.Path(args.plan_out).write_text(plan.dumps())
+
+    # 2) map the plan onto the local mesh
+    policy = ShardPolicy.from_strategy(
+        plan.strategies[len(plan.strategies) // 2],
+        remat_segments=[s.ckpt for s in plan.strategies[:1]])
+    mesh = make_local_mesh()
+
+    dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab_size=cfg.vocab_size,
+                      vision_tokens=cfg.vision_tokens,
+                      d_vision=cfg.d_vision,
+                      encoder_seq=cfg.encoder_seq, d_model=cfg.d_model)
+    gen = (text_corpus_batches(args.corpus, dcfg) if args.corpus
+           else synthetic_lm_batches(dcfg))
+
+    with mesh:
+        step = make_train_step(cfg, mesh, policy, batch_specs(dcfg),
+                               AdamWConfig(lr=args.lr))
+        params, opt = init_train_state(cfg, mesh, policy)
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(params))
+        print(f"model: {args.arch} ({n_params/1e6:.1f}M params), "
+              f"mesh={dict(mesh.shape)}, policy={policy}")
+        t0 = time.time()
+        tokens_seen = 0
+        for i in range(1, args.steps + 1):
+            batch = {k: jnp.asarray(v) for k, v in next(gen).items()}
+            params, opt, metrics = step.fn(params, opt, batch)
+            tokens_seen += args.batch * args.seq
+            if i % args.log_every == 0 or i == args.steps:
+                dt = time.time() - t0
+                print(f"step {i:5d}  loss={float(metrics['loss']):.4f}  "
+                      f"gnorm={float(metrics['grad_norm']):.3f}  "
+                      f"tok/s={tokens_seen/dt:,.0f}")
+            if args.ckpt_dir and i % args.ckpt_every == 0:
+                d = save_train_state(i, params, opt, args.ckpt_dir)
+                print(f"  checkpoint -> {d}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,222 @@
+"""Grouped-query attention with RoPE, optional QK-norm / QKV-bias /
+sliding-window masking, KV-cache decode, and a pluggable inner kernel
+(pure-jnp reference here; Pallas flash kernel in repro.kernels)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .flags import scan_unroll
+from .layers import apply_rope, init_dense, rms_norm
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, *, d_model: Optional[int] = None,
+                   cross: bool = False) -> Dict[str, Any]:
+    d = d_model or cfg.d_model
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_dense(ks[0], d, cfg.q_dim, cfg.dtype),
+        "wk": init_dense(ks[1], d, cfg.kv_dim, cfg.dtype),
+        "wv": init_dense(ks[2], d, cfg.kv_dim, cfg.dtype),
+        "wo": init_dense(ks[3], cfg.q_dim, d, cfg.dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((cfg.q_dim,), cfg.dtype)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), cfg.dtype)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), cfg.dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.dh,), cfg.dtype)
+        p["k_norm"] = jnp.ones((cfg.dh,), cfg.dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, positions, *, rope: bool = True):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.dh)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.dh)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+             causal: bool, window: Optional[int] = None,
+             q_offset: Any = 0,
+             kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference grouped-query attention.
+
+    q (B,S,H,dh); k/v (B,T,KV,dh).  ``q_offset`` is the absolute position of
+    q[0] (for decode: cache length).  ``kv_len`` masks cache positions >= it.
+    """
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = q_offset + jnp.arange(S)              # (S,)
+    kpos = jnp.arange(T)                         # (T,)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    mask_bt = mask[None, None, None]
+    if kv_len is not None:
+        valid = kpos[None, :] < jnp.asarray(kv_len).reshape(-1, 1)   # (B,T)
+        mask_bt = mask_bt & valid[:, None, None, None, :]
+    scores = jnp.where(mask_bt, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                 causal: bool, window: Optional[int] = None,
+                 block_q: int = 512) -> jax.Array:
+    """Memory-efficient attention: q is processed in blocks (scan +
+    rematerialized block body), so peak score memory is
+    (B, H, block_q, T) instead of (B, H, S, T).  This is the pure-jnp
+    analogue of the Pallas flash kernel, used on non-TPU backends and in
+    the 512-device dry-runs."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(block_q, S)
+    while S % bq:
+        bq //= 2
+    nq = S // bq
+    qb = jnp.moveaxis(q.reshape(B, nq, bq, H, dh), 1, 0)     # (nq,B,bq,H,dh)
+    scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    # Under sequence parallelism, pin K/V to seq-replicated (batch-sharded
+    # only): GSPMD would otherwise re-all-gather them for EVERY q chunk of
+    # the rematerialized scan body (64x per layer-pass); one explicit gather
+    # is tiny thanks to GQA (kv_dim << q_dim).  Without seq sharding the
+    # pin is left off — it perturbs GSPMD's (cheaper) baseline layout.
+    from .flags import constrain_batch_only, seq_sharding_active
+    if seq_sharding_active():
+        kf = constrain_batch_only(k.astype(jnp.float32))
+        vf = constrain_batch_only(v.astype(jnp.float32))
+    else:
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+    kpos = jnp.arange(T)
+
+    def block(carry, inp):
+        i, qc = inp                                          # qc (B,bq,H,dh)
+        qg = qc.reshape(B, bq, KV, G, dh).astype(jnp.float32)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, kf) * scale
+        qpos = i * bq + jnp.arange(bq)
+        mask = jnp.ones((bq, T), bool)
+        if causal:
+            mask &= kpos[None, :] <= qpos[:, None]
+        if window is not None:
+            mask &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgst,btkd->bskgd", pr, vf)
+        return carry, o.reshape(B, bq, H, dh).astype(q.dtype)
+
+    _, ob = jax.lax.scan(jax.checkpoint(block, prevent_cse=False),
+                         0, (jnp.arange(nq), qb), unroll=scan_unroll(nq))
+    return jnp.moveaxis(ob, 0, 1).reshape(B, S, H, dh)
+
+
+def attention(p, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *,
+              causal: bool = True,
+              window: Optional[int] = None,
+              impl: str = "auto") -> jax.Array:
+    """Full-sequence (train / prefill) self-attention."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions)
+    if impl == "auto":
+        impl = "chunked" if S >= 1024 else "ref"
+    if impl == "flash":
+        from repro.kernels.ops import flash_attention as _flash
+        out = _flash(q, k, v, causal=causal, window=window)
+    elif impl == "chunked":
+        out = sdpa_chunked(q, k, v, causal=causal, window=window)
+    else:
+        out = sdpa_ref(q, k, v, causal=causal, window=window)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def attention_decode(p, x: jax.Array, cache: Dict[str, jax.Array],
+                     cache_index: jax.Array, cfg: ModelConfig, *,
+                     window: Optional[int] = None
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode with a ring or linear KV cache.
+
+    x (B,1,d).  cache["k"/"v"]: (B, C, KV, dh) with C = max context (full) or
+    the sliding window span.  ``cache_index`` — number of tokens already in
+    context (absolute position of the new token).
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    C = cache["k"].shape[1]
+    pos = jnp.full((B, 1), cache_index, dtype=jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, pos)
+    slot = (cache_index % C).astype(jnp.int32)
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+
+    # position stored in each ring slot: the latest p with p % C == slot
+    # and p <= cache_index
+    kpos = jnp.arange(C)
+    abs_pos = cache_index - ((cache_index - kpos) % C)
+    valid = (abs_pos >= 0) & (abs_pos <= cache_index)   # >=0: slot written
+    if window is not None:
+        valid &= abs_pos > cache_index - window
+    scale = 1.0 / jnp.sqrt(cfg.dh).astype(jnp.float32)
+    KV = cfg.n_kv_heads
+    G = cfg.n_heads // KV
+    qg = q.reshape(B, 1, KV, G, cfg.dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        new_k.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, new_v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+def cross_attention(p, x: jax.Array, enc_kv: Tuple[jax.Array, jax.Array],
+                    cfg: ModelConfig) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (no RoPE)."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.dh)
+    k, v = enc_kv
+    out = sdpa_ref(q, k, v, causal=False)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def precompute_cross_kv(p, enc_out: jax.Array, cfg: ModelConfig):
+    B, T, _ = enc_out.shape
+    k = (enc_out @ p["wk"]).reshape(B, T, cfg.n_kv_heads, cfg.dh)
+    v = (enc_out @ p["wv"]).reshape(B, T, cfg.n_kv_heads, cfg.dh)
+    return k, v
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, context: int,
+                  *, dtype=None) -> Dict[str, jax.Array]:
+    """Cache for one layer; ``context`` = full context or window span."""
+    span = context if cfg.sliding_window is None else min(context, cfg.sliding_window)
+    dt = dtype or cfg.dtype
+    shape = (batch, span, cfg.n_kv_heads, cfg.dh)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

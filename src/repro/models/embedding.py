@@ -1,0 +1,38 @@
+"""Token / positional / stub-modality embeddings."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import init_dense
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+def embed(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    return jnp.take(table, tokens, axis=0)
+
+
+def init_learned_pos(key, max_len: int, d: int, dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (max_len, d), jnp.float32) * 0.01).astype(dtype)
+
+
+def init_projector(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """2-layer MLP projector (VLM frontend stub -> LM width)."""
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": init_dense(k1, d_in, d_out, dtype),
+        "b1": jnp.zeros((d_out,), dtype),
+        "w2": init_dense(k2, d_out, d_out, dtype),
+        "b2": jnp.zeros((d_out,), dtype),
+    }
+
+
+def project(p, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu((x @ p["w1"] + p["b1"]).astype(jnp.float32))
+    return (h.astype(x.dtype) @ p["w2"]) + p["b2"]

@@ -1,0 +1,180 @@
+"""Whisper-style encoder-decoder transformer backbone.
+
+Per the modality carve-out, the mel-spectrogram + conv feature extractor is a
+STUB: the encoder consumes precomputed frame embeddings (B, T_enc, d) from
+``input_specs``.  We implement the transformer itself: non-causal encoder,
+causal decoder with cross-attention, learned positional embeddings,
+LayerNorm + GELU MLPs (the Whisper recipe), and a one-token decode step with
+self-attention KV cache + precomputed cross K/V.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention, attention_decode, cross_attention,
+                        init_attention, init_kv_cache, precompute_cross_kv)
+from .common import ModelConfig
+from .flags import constrain_batch, scan_unroll
+from .embedding import embed, init_embedding, init_learned_pos
+from .layers import cross_entropy_loss, layer_norm
+from .mlp import gelu_mlp, init_gelu_mlp
+
+
+def _init_ln(cfg):
+    return {"w": jnp.ones((cfg.d_model,), cfg.dtype),
+            "b": jnp.zeros((cfg.d_model,), cfg.dtype)}
+
+
+def init_enc_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": _init_ln(cfg),
+        "attn": init_attention(k1, cfg),
+        "ln2": _init_ln(cfg),
+        "mlp": init_gelu_mlp(k2, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": _init_ln(cfg),
+        "self_attn": init_attention(k1, cfg),
+        "ln_x": _init_ln(cfg),
+        "cross_attn": init_attention(k2, cfg, cross=True),
+        "ln2": _init_ln(cfg),
+        "mlp": init_gelu_mlp(k3, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def init_encdec(key, cfg: ModelConfig, *, max_dec_len: int = 4096) -> Dict[str, Any]:
+    ks = jax.random.split(key, 6)
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    return {
+        "enc_pos": init_learned_pos(ks[0], cfg.encoder_seq or 1500,
+                                    cfg.d_model, cfg.dtype),
+        "enc_blocks": jax.vmap(lambda k: init_enc_block(k, cfg))(
+            jax.random.split(ks[1], n_enc)),
+        "enc_ln": _init_ln(cfg),
+        "embed": init_embedding(ks[2], cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "dec_pos": init_learned_pos(ks[3], max_dec_len, cfg.d_model, cfg.dtype),
+        "dec_blocks": jax.vmap(lambda k: init_dec_block(k, cfg))(
+            jax.random.split(ks[4], cfg.n_layers)),
+        "dec_ln": _init_ln(cfg),
+    }
+
+
+def _enc_block(p, x, positions, cfg):
+    h = layer_norm(x, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+    x = x + attention(p["attn"], h, positions, cfg, causal=False)
+    h = layer_norm(x, p["ln2"]["w"], p["ln2"]["b"], cfg.norm_eps)
+    return x + gelu_mlp(p["mlp"], h)
+
+
+def encode(params, frames: jax.Array, cfg: ModelConfig, *,
+           remat: bool = False) -> jax.Array:
+    """frames (B, T_enc, d) — stub conv-frontend output."""
+    B, T, _ = frames.shape
+    x = frames.astype(cfg.dtype) + params["enc_pos"][:T]
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+
+    def body(h, lp):
+        return constrain_batch(_enc_block(lp, h, positions, cfg)), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    n_l = params["enc_blocks"]["ln1"]["w"].shape[0]
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=scan_unroll(n_l))
+    return layer_norm(x, params["enc_ln"]["w"], params["enc_ln"]["b"],
+                      cfg.norm_eps)
+
+
+def _dec_block(p, x, positions, enc_out, cfg):
+    h = layer_norm(x, p["ln1"]["w"], p["ln1"]["b"], cfg.norm_eps)
+    x = x + attention(p["self_attn"], h, positions, cfg, causal=True)
+    h = layer_norm(x, p["ln_x"]["w"], p["ln_x"]["b"], cfg.norm_eps)
+    kv = precompute_cross_kv(p["cross_attn"], enc_out, cfg)
+    x = x + cross_attention(p["cross_attn"], h, kv, cfg)
+    h = layer_norm(x, p["ln2"]["w"], p["ln2"]["b"], cfg.norm_eps)
+    return x + gelu_mlp(p["mlp"], h)
+
+
+def decode_train(params, tokens: jax.Array, enc_out: jax.Array,
+                 cfg: ModelConfig, *, remat: bool = False) -> jax.Array:
+    B, S = tokens.shape
+    # wrap positions past the learned table (synthetic long-context stress
+    # shapes exceed whisper's real 448-token decoder window; see DESIGN.md)
+    P_len = params["dec_pos"].shape[0]
+    pos_emb = jnp.take(params["dec_pos"], jnp.arange(S) % P_len, axis=0)
+    x = embed(params["embed"], tokens) + pos_emb
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def body(h, lp):
+        return constrain_batch(_dec_block(lp, h, positions, enc_out, cfg)), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    n_l = params["dec_blocks"]["ln1"]["w"].shape[0]
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"], unroll=scan_unroll(n_l))
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    return x @ params["embed"].T      # whisper ties output projection
+
+
+def encdec_loss(params, batch: Dict[str, jax.Array], cfg: ModelConfig, *,
+                remat: bool = False) -> jax.Array:
+    enc_out = encode(params, batch["frames"], cfg, remat=remat)
+    logits = decode_train(params, batch["tokens"], enc_out, cfg, remat=remat)
+    return cross_entropy_loss(logits, batch["labels"])
+
+
+# --------------------------------------------------------------------------
+# decode path
+# --------------------------------------------------------------------------
+
+def init_encdec_decode_state(params, frames: jax.Array, cfg: ModelConfig,
+                             context: int) -> Dict[str, Any]:
+    """Run the encoder once, precompute every layer's cross K/V, and
+    allocate self-attention caches."""
+    B = frames.shape[0]
+    enc_out = encode(params, frames, cfg)
+    cross_kv = jax.vmap(
+        lambda lp: precompute_cross_kv(lp["cross_attn"], enc_out, cfg),
+        in_axes=0)(params["dec_blocks"])
+    one = init_kv_cache(cfg, B, context)
+    n = cfg.n_layers
+    self_cache = jax.tree.map(lambda v: jnp.broadcast_to(v, (n,) + v.shape), one)
+    return {"cross_kv": cross_kv, "self_cache": self_cache,
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def encdec_decode_step(params, state, token: jax.Array,
+                       cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, Any]]:
+    """token (B,) -> logits (B, V)."""
+    index = state["index"]
+    x = embed(params["embed"], token)[:, None, :]
+    pos_emb = jnp.take(params["dec_pos"],
+                       index % params["dec_pos"].shape[0], axis=0)
+    x = x + pos_emb[None, None, :]
+
+    def body(h, inp):
+        lp, cache, ckv = inp
+        hh = layer_norm(h, lp["ln1"]["w"], lp["ln1"]["b"], cfg.norm_eps)
+        a, cache2 = attention_decode(lp["self_attn"], hh, cache, index, cfg)
+        h = h + a
+        hh = layer_norm(h, lp["ln_x"]["w"], lp["ln_x"]["b"], cfg.norm_eps)
+        h = h + cross_attention(lp["cross_attn"], hh, ckv, cfg)
+        hh = layer_norm(h, lp["ln2"]["w"], lp["ln2"]["b"], cfg.norm_eps)
+        h = h + gelu_mlp(lp["mlp"], hh)
+        return h, cache2
+
+    n_l = params["dec_blocks"]["ln1"]["w"].shape[0]
+    x, new_cache = jax.lax.scan(
+        body, x, (params["dec_blocks"], state["self_cache"],
+                  state["cross_kv"]), unroll=scan_unroll(n_l))
+    x = layer_norm(x, params["dec_ln"]["w"], params["dec_ln"]["b"], cfg.norm_eps)
+    logits = (x @ params["embed"].T)[:, 0]
+    return logits, {"cross_kv": state["cross_kv"], "self_cache": new_cache,
+                    "index": index + 1}

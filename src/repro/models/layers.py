@@ -1,0 +1,79 @@
+"""Primitive layers: norms, rotary embeddings, initializers."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+               scale: Optional[float] = None) -> jax.Array:
+    s = scale if scale is not None else (1.0 / jnp.sqrt(d_in))
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, dh); positions: (..., seq) int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                         # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., seq, dh/2)
+    cos = jnp.cos(ang)[..., :, None, :]                   # (..., seq, 1, dh/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softmax_fp32(x: jax.Array, axis: int = -1) -> jax.Array:
+    return jax.nn.softmax(x.astype(jnp.float32), axis=axis)
+
+
+def gelu(x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x, approximate=True)
+
+
+def swiglu(gate: jax.Array, up: jax.Array) -> jax.Array:
+    return jax.nn.silu(gate.astype(jnp.float32)).astype(gate.dtype) * up
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       ignore_id: int = -100) -> jax.Array:
+    """Mean token cross entropy in fp32. logits (..., V), labels (...).
+
+    Written with explicit reductions instead of take_along_axis so a
+    vocab-sharded logits tensor only needs small (B, S) all-reduces —
+    a vocab-dim gather would force GSPMD to all-gather the full logits.
+    """
+    lf = logits.astype(jnp.float32)
+    V = lf.shape[-1]
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    logz = jnp.log(jnp.sum(jnp.exp(lf - m), axis=-1)) + m[..., 0]
+    iota = jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+    onehot = (iota == labels[..., None].clip(0)).astype(jnp.float32)
+    gold = jnp.sum(lf * onehot, axis=-1)
+    nll = logz - gold
+    mask = (labels != ignore_id).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,36 @@
+"""Feed-forward blocks: SwiGLU (LLaMA/Qwen family) and GELU (Whisper)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from .layers import gelu, init_dense, swiglu
+
+
+def init_swiglu(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(k1, d, d_ff, dtype),
+        "w_up": init_dense(k2, d, d_ff, dtype),
+        "w_down": init_dense(k3, d_ff, d, dtype),
+    }
+
+
+def swiglu_mlp(p, x: jax.Array) -> jax.Array:
+    return swiglu(x @ p["w_gate"], x @ p["w_up"]) @ p["w_down"]
+
+
+def init_gelu_mlp(key, d: int, d_ff: int, dtype=jnp.bfloat16) -> Dict[str, Any]:
+    k1, k2 = jax.random.split(key, 2)
+    return {
+        "w_fc": init_dense(k1, d, d_ff, dtype),
+        "b_fc": jnp.zeros((d_ff,), dtype),
+        "w_proj": init_dense(k2, d_ff, d, dtype),
+        "b_proj": jnp.zeros((d,), dtype),
+    }
+
+
+def gelu_mlp(p, x: jax.Array) -> jax.Array:
+    return gelu(x @ p["w_fc"] + p["b_fc"]) @ p["w_proj"] + p["b_proj"]

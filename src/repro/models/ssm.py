@@ -1,0 +1,209 @@
+"""Mamba2 blocks via SSD (state-space duality, arXiv:2405.21060).
+
+The sequence transform is the chunked SSD algorithm: quadratic attention-like
+computation inside chunks, linear recurrence across chunks.  ``ssd_chunked``
+is the pure-jnp core (also the oracle for the Pallas kernel); ``ssm_step``
+is the O(1) decode update.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import init_dense, rms_norm
+
+
+def init_ssm(key, cfg: ModelConfig, dtype=None) -> Dict[str, Any]:
+    dt = dtype or cfg.dtype
+    d, di = cfg.d_model, cfg.d_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, 1
+    conv_dim = di + 2 * G * N
+    d_in_proj = 2 * di + 2 * G * N + H
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "in_proj": init_dense(k1, d, d_in_proj, dt),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm_conv, conv_dim), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_w": jnp.ones((di,), dt),
+        "out_proj": init_dense(k3, di, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x (B,S,C), w (K,C)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, chunk: int) -> jax.Array:
+    """Chunked SSD scan.
+
+    x  (B,S,H,P) inputs per head
+    dt (B,S,H)   positive step sizes
+    A  (H,)      negative decay rates
+    Bm (B,S,H,N) input projections (already broadcast over heads)
+    Cm (B,S,H,N) output projections
+    returns y (B,S,H,P); state handled internally (zero init).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        # causal: zero-padding the tail never affects the first S outputs
+        pad = Q - S % Q
+        padded = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))), A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0))), Q)
+        return padded[:, :S]
+    nc = S // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nc, Q, H, P)
+    dtc = dt.astype(jnp.float32).reshape(Bsz, nc, Q, H)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, H, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, H, N)
+
+    dA = dtc * A.astype(jnp.float32)               # (B,nc,Q,H), negative
+    cum = jnp.cumsum(dA, axis=2)                   # inclusive cumsum
+    # intra-chunk (attention-like) part
+    CB = jnp.einsum("bnqhr,bnkhr->bnqkh", Cc, Bc)
+    iq = jnp.arange(Q)
+    causal = (iq[:, None] >= iq[None, :])[None, None, :, :, None]
+    # mask the exponent (not the product) so exp never sees a positive
+    # argument — keeps gradients finite through the masked entries
+    delta = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,Q,K,H)
+    decay = jnp.exp(jnp.where(causal, delta, -1e30))
+    M = CB * decay * dtc[:, :, None, :, :]
+    y_diag = jnp.einsum("bnqkh,bnkhp->bnqhp", M, xf)
+
+    # chunk-boundary states
+    last = cum[:, :, -1:, :]                                   # (B,nc,1,H)
+    decay_to_end = jnp.exp(last - cum)                         # (B,nc,Q,H)
+    S_chunk = jnp.einsum("bnkhr,bnkhp->bnhpr",
+                         Bc * (decay_to_end * dtc)[..., None], xf)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(last[:, :, 0, :])                    # (B,nc,H)
+
+    def step(s, inp):
+        dec, add = inp                                         # (B,H), (B,H,P,N)
+        s_out = s                                              # state BEFORE chunk
+        s_next = s * dec[:, :, None, None] + add
+        return s_next, s_out
+
+    # NOTE: deliberately NOT unrolled under force_unroll() — the recurrence
+    # body is a tiny elementwise update (2*B*H*P*N FLOPs/chunk, ~1e-5 of the
+    # intra-chunk einsums, which live OUTSIDE this scan), while unrolling
+    # nc=512 iterations x n_layers explodes probe compile time/memory.
+    _, s_before = jax.lax.scan(
+        step, jnp.zeros((Bsz, H, P, N), jnp.float32),
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(S_chunk, 1, 0)))
+    s_before = jnp.moveaxis(s_before, 0, 1)                    # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bnqhr,bnhpr->bnqhp", Cc * jnp.exp(cum)[..., None],
+                       s_before)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype)
+
+
+def ssd_step(state: jax.Array, x: jax.Array, dt: jax.Array, A: jax.Array,
+             Bm: jax.Array, Cm: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD update.
+
+    state (B,H,P,N); x (B,H,P); dt (B,H); Bm/Cm (B,H,N).
+    returns (new_state, y (B,H,P)).
+    """
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    add = jnp.einsum("bhp,bhr->bhpr", x.astype(jnp.float32)
+                     * dt.astype(jnp.float32)[..., None], Bm.astype(jnp.float32))
+    new = state * dA[:, :, None, None] + add
+    y = jnp.einsum("bhpr,bhr->bhp", new, Cm.astype(jnp.float32))
+    return new, y.astype(x.dtype)
+
+
+def _split_proj(p, x: jax.Array, cfg: ModelConfig):
+    di, H, N, G = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, 1
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [di, di + di + 2 * G * N], axis=-1)
+    return z, xBC, dt
+
+
+def ssm_block(p, x: jax.Array, cfg: ModelConfig, *,
+              use_kernel: bool = False) -> jax.Array:
+    """Full-sequence Mamba2 block. x (B,S,d) -> (B,S,d)."""
+    Bsz, S, _ = x.shape
+    di, H, N = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    P = cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(p, x, cfg)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = xs.reshape(Bsz, S, H, P)
+    Bm = jnp.broadcast_to(Bm[:, :, None, :], (Bsz, S, H, N))
+    Cm = jnp.broadcast_to(Cm[:, :, None, :], (Bsz, S, H, N))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    if use_kernel:
+        from repro.kernels.ops import ssd_scan as _ssd
+        y = _ssd(xs, dtp, A, Bm, Cm, chunk=cfg.ssm_chunk)
+    else:
+        y = ssd_chunked(xs, dtp, A, Bm, Cm, cfg.ssm_chunk)
+    y = y + (p["D"].astype(jnp.float32)[:, None] * xs.astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(Bsz, S, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                 p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    H, P, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def ssm_block_decode(p, x: jax.Array, state: Dict[str, jax.Array],
+                     cfg: ModelConfig) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token Mamba2 step. x (B,1,d)."""
+    Bsz = x.shape[0]
+    di, H, N, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    z, xBC, dt = _split_proj(p, x[:, 0], cfg)
+    # conv ring: state["conv"] holds the previous K-1 inputs
+    hist = jnp.concatenate([state["conv"],
+                            xBC[:, None].astype(state["conv"].dtype)], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(x.dtype)
+    new_conv = hist[:, 1:].astype(state["conv"].dtype)
+
+    xs, Bm, Cm = jnp.split(xBC, [di, di + N], axis=-1)
+    xs = xs.reshape(Bsz, H, P)
+    Bm = jnp.broadcast_to(Bm[:, None, :], (Bsz, H, N))
+    Cm = jnp.broadcast_to(Cm[:, None, :], (Bsz, H, N))
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    new_ssm, y = ssd_step(state["ssm"], xs, dtp, A, Bm, Cm)
+    y = y + (p["D"].astype(jnp.float32)[:, None] * xs.astype(jnp.float32)
+             ).astype(y.dtype)
+    y = y.reshape(Bsz, 1, di)
+    y = rms_norm(y * jax.nn.silu(z.astype(jnp.float32)
+                                 ).astype(y.dtype)[:, None, :],
+                 p["norm_w"], cfg.norm_eps)
+    return y @ p["out_proj"], {"ssm": new_ssm, "conv": new_conv}

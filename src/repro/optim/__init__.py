@@ -1,0 +1,5 @@
+from .adamw import AdamWConfig, adamw_init, adamw_update
+from .schedule import cosine_schedule, linear_warmup
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "linear_warmup"]

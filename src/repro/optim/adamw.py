@@ -1,0 +1,79 @@
+"""AdamW in pure JAX with mixed-precision model states.
+
+Matches the paper's memory accounting: bf16 live params + fp32 master copy,
+fp32 first/second moments (16 bytes/param total with bf16 grads).  The
+optimizer state is a pytree congruent with the params, so whatever sharding
+the plan assigns to a parameter automatically applies to its states (ZeRO
+partitioning falls out of the SDP sharding rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # optimizer-state precision: "fp32" (16 B/param total, paper default)
+    # or "bf16" moments + fp32 master (10 B/param) — the lever that brings
+    # kimi-k2-scale state under HBM (EXPERIMENTS.md capacity note)
+    state_dtype: str = "fp32"
+
+
+def adamw_init(params, cfg: "AdamWConfig" = None) -> Dict[str, Any]:
+    mdt = jnp.bfloat16 if (cfg and cfg.state_dtype == "bf16") else jnp.float32
+    f32 = lambda p: p.astype(jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "master": jax.tree.map(f32, params),
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, mdt), params),
+    }
+
+
+def global_norm(tree) -> jax.Array:
+    sq = jax.tree.map(lambda g: jnp.sum(jnp.square(g.astype(jnp.float32))), tree)
+    return jnp.sqrt(jax.tree_util.tree_reduce(jnp.add, sq, jnp.zeros((), jnp.float32)))
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig,
+                 lr_scale: jax.Array | float = 1.0) -> Tuple[Any, Dict[str, Any], Dict[str, jax.Array]]:
+    step = state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = cfg.lr * lr_scale
+
+    b1c = 1.0 - cfg.beta1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.beta2 ** step.astype(jnp.float32)
+
+    def upd(master, g, m, v):
+        mdt = m.dtype
+        g = g.astype(jnp.float32) * clip
+        m = cfg.beta1 * m.astype(jnp.float32) + (1.0 - cfg.beta1) * g
+        v = cfg.beta2 * v.astype(jnp.float32) + (1.0 - cfg.beta2) * jnp.square(g)
+        mhat = m / b1c
+        vhat = v / b2c
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + cfg.eps)
+                                    + cfg.weight_decay * master)
+        return new_master, m.astype(mdt), v.astype(mdt)
+
+    flat_master, treedef = jax.tree_util.tree_flatten(state["master"])
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    new = [upd(a, b, c, d) for a, b, c, d in zip(flat_master, flat_g, flat_m, flat_v)]
+    master = treedef.unflatten([t[0] for t in new])
+    m = treedef.unflatten([t[1] for t in new])
+    v = treedef.unflatten([t[2] for t in new])
+    new_params = jax.tree.map(lambda mp, p: mp.astype(p.dtype), master, params)
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, {"step": step, "master": master, "m": m, "v": v}, metrics

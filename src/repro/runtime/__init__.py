@@ -1,0 +1,11 @@
+from .executor import (BuiltStep, abstract_decode_state, abstract_opt_state,
+                       abstract_params, init_train_state, make_prefill_step,
+                       make_serve_step, make_train_step)
+from .sharding import (ShardPolicy, batch_shardings, decode_state_shardings,
+                       opt_shardings, param_shardings)
+
+__all__ = ["BuiltStep", "ShardPolicy", "abstract_decode_state",
+           "abstract_opt_state", "abstract_params", "batch_shardings",
+           "decode_state_shardings", "init_train_state", "make_prefill_step",
+           "make_serve_step", "make_train_step", "opt_shardings",
+           "param_shardings"]

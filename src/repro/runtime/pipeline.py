@@ -1,0 +1,161 @@
+"""Pipeline-parallel runtime: GPipe-style micro-batch pipelining as a
+``shard_map`` over a ``pipe`` mesh axis with ``lax.ppermute`` stage
+hand-off, composable with data parallelism on a ``data`` axis.
+
+Takeaway #1 maps this axis onto the slowest interconnect — across pods in
+the production mesh.  Differentiating straight through the pipelined scan
+gives GPipe semantics (all in-flight activations stashed); the cost model
+accounts 1F1B separately (§IV-B).
+
+The stage computation runs *locally* per device (pure jnp inside
+shard_map), so this runtime composes PP x DP; TP/SDP within a stage are
+served by the GSPMD executor path.  Heterogeneous multi-stack models
+(zamba2 / whisper) use the executor path only — see DESIGN.md.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.models.embedding import embed
+from repro.models.layers import cross_entropy_loss, rms_norm
+from repro.models.transformer import _BLOCK_APPLY, build_stacks
+
+try:  # JAX >= 0.6
+    from jax import shard_map as _shard_map
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_vma=False)
+except (ImportError, TypeError):  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map_old
+
+    def shard_map(f, mesh, in_specs, out_specs):
+        return _shard_map_old(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, check_rep=False)
+
+
+def stage_split_params(params, n_stages: int):
+    """Reshape every stacked (L, ...) leaf to (P, L/P, ...): dim0 shards
+    over the pipe axis so each device holds exactly its stage's layers."""
+    stacks = params["stacks"]
+    assert len(stacks) == 1, "pipeline runtime requires one homogeneous stack"
+
+    def resh(v):
+        L = v.shape[0]
+        assert L % n_stages == 0, f"{L} layers not divisible by {n_stages} stages"
+        return v.reshape(n_stages, L // n_stages, *v.shape[1:])
+
+    out = dict(params)
+    out["stacks"] = [jax.tree.map(resh, stacks[0])]
+    return out
+
+
+def pipeline_specs(params_split, mesh: Mesh):
+    """Pipe-sharded specs for split params: stage dim over 'pipe'."""
+    def leaf_spec(path, v):
+        names = [getattr(k, "key", None) for k in path]
+        if "stacks" in names:
+            return NamedSharding(mesh, P("pipe", *([None] * (v.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_split)
+
+
+def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, n_micro: int,
+                       schedule: str = "gpipe"):
+    """Returns loss(params_split, batch) running the pipelined schedule.
+
+    batch: tokens/labels (m, B_m, S) — micro dim leading, batch dim sharded
+    over 'data', replicated over 'pipe'.
+
+    ``schedule="gpipe"`` stashes every tick's activations (GPipe memory);
+    ``schedule="1f1b"`` rematerializes the tick body, so only the per-tick
+    boundary carries are stashed — the 1F1B-flush *memory* profile (stash
+    ∝ boundary × ticks instead of full layer activations × ticks).  The
+    compute result is identical either way; the cost model accounts the
+    schedules' time/memory difference analytically (Eq. 5/9).
+    """
+    n_stages = mesh.shape["pipe"]
+    (kind, _), = build_stacks(cfg)
+    block = _BLOCK_APPLY[kind]
+
+    def stage_fn(stack_params, x, positions):
+        def body(carry, lp):
+            h, _ = block(lp, carry, positions, cfg, window=cfg.sliding_window)
+            return h, None
+        x, _ = jax.lax.scan(body, x, stack_params)
+        return x
+
+    def local_step(params, tokens, labels):
+        # tokens/labels: (m, B_loc, S) local shards
+        stage = jax.lax.axis_index("pipe")
+        m, B, S = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        stack = jax.tree.map(lambda v: v[0], params["stacks"][0])  # (Lp, ...)
+        d = cfg.d_model
+        T = m + n_stages - 1
+        perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            y_prev, acc = carry
+            x_recv = jax.lax.ppermute(y_prev, "pipe", perm)
+            mb_idx = jnp.clip(t, 0, m - 1)
+            mb = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0, False)
+            x_emb = embed(params["embed"], mb).astype(cfg.dtype)
+            x_in = jnp.where(stage == 0, x_emb, x_recv)
+            y = stage_fn(stack, x_in, positions)
+            # final stage: head + loss for micro-batch t - (P-1)
+            lb_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
+            lb = jax.lax.dynamic_index_in_dim(labels, lb_idx, 0, False)
+            h = rms_norm(y, params["final_norm"], cfg.norm_eps)
+            logits = h @ (params["head"] if "head" in params
+                          else params["embed"].T)
+            loss_t = cross_entropy_loss(logits, lb)
+            is_last = stage == n_stages - 1
+            valid = (t >= n_stages - 1) & is_last
+            acc = acc + jnp.where(valid, loss_t, 0.0)
+            return (y, acc), None
+
+        y0 = jnp.zeros((B, S, d), cfg.dtype)
+        tick_fn = (jax.checkpoint(tick, prevent_cse=False)
+                   if schedule == "1f1b" else tick)
+        (_, acc), _ = jax.lax.scan(tick_fn, (y0, jnp.zeros((), jnp.float32)),
+                                   jnp.arange(T))
+        # NOTE: no collective here — the loss lives on the last stage only.
+        # Summing across stages inside the differentiated objective would
+        # multiply every gradient by P (the VJP of psum is a psum of the
+        # all-ones cotangents); the caller psums the *value* after autodiff.
+        return acc / m
+
+    def loss_and_grads(params_split, batch):
+        def inner(params, tokens, labels):
+            loss_local, grads = jax.value_and_grad(
+                lambda p: local_step(p, tokens, labels))(params)
+            loss = jax.lax.psum(loss_local, "pipe")   # value: last stage only
+            # pipe-replicated params (embed/head/final_norm) get gradient
+            # contributions from different stages -> sum them; stack grads
+            # stay local to their stage.
+            grads = {k: (v if k == "stacks"
+                         else jax.lax.psum(v, "pipe"))
+                     for k, v in grads.items()}
+            # DP gradient sync
+            if "data" in mesh.axis_names:
+                grads = jax.lax.pmean(grads, "data")
+                loss = jax.lax.pmean(loss, "data")
+            return loss, grads
+
+        pspecs = pipeline_specs(params_split, mesh)
+        pspec_tree = jax.tree.map(lambda s: s.spec, pspecs)
+        data_axes = tuple(a for a in ("data",) if a in mesh.axis_names)
+        tok_spec = P(None, data_axes if data_axes else None, None)
+        fn = shard_map(inner, mesh,
+                       in_specs=(pspec_tree, tok_spec, tok_spec),
+                       out_specs=(P(), pspec_tree))
+        return fn(params_split, batch["tokens"], batch["labels"])
+
+    return loss_and_grads

@@ -1,0 +1,60 @@
+"""Plan → executor bridge: derive a concrete mesh execution policy from a
+Galvatron-searched ``ParallelPlan``.
+
+The search is layer-granular; the GSPMD executor applies policies per
+layer-stack *segment* (scan-over-layers keeps segments homogeneous), so the
+bridge reduces each segment's strategies to their dominant choice:
+
+  * TP on the `model` axis iff any layer's plan has tp > 1,
+  * ZeRO (SDP) on the batch axes iff the majority of layers use sdp > 1,
+  * remat per segment iff the majority of the segment's layers have CKPT,
+  * sequence parallelism iff the modeled stash exceeds the HBM budget
+    (the §Perf policy rule).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+from repro.core.layerspec import LayerSpec
+from repro.core.plan import ParallelPlan
+from repro.models.common import ModelConfig
+from repro.models.transformer import build_stacks
+from repro.roofline.analysis import modeled_memory
+from repro.runtime.sharding import ShardPolicy
+
+
+def _segment_bounds(cfg: ModelConfig) -> List[int]:
+    sizes = [n for _, n in build_stacks(cfg)]
+    return sizes
+
+
+def policy_from_plan(cfg: ModelConfig, plan: ParallelPlan, *,
+                     specs: Optional[Sequence[LayerSpec]] = None,
+                     seq_len: int = 4096, chips: int = 256,
+                     hbm_capacity: float = 16e9) -> ShardPolicy:
+    strategies = plan.strategies
+    # body layers only (embed/head specs may pad the plan at either end)
+    n_body = cfg.n_layers
+    if len(strategies) > n_body:
+        off = (len(strategies) - n_body) // 2
+        strategies = strategies[off:off + n_body]
+
+    tp = any(s.tp > 1 for s in strategies)
+    zero = sum(s.sdp > 1 for s in strategies) * 2 >= len(strategies)
+
+    remat: List[bool] = []
+    i = 0
+    for seg in _segment_bounds(cfg):
+        seg_s = strategies[i:i + seg] or strategies[-1:]
+        remat.append(sum(s.ckpt for s in seg_s) * 2 >= len(seg_s))
+        i += seg
+
+    seq_shard = False
+    if specs is not None:
+        mm = modeled_memory(
+            list(specs), mode="train", chips=chips, tp=16, data_shards=16,
+            remat=any(remat), batch=plan.global_batch,
+            hbm_capacity=hbm_capacity)
+        seq_shard = not mm.fits      # §Perf rule: only when stash overflows
+    return ShardPolicy(tp=tp, zero=zero, remat_segments=tuple(remat),
+                       seq_shard=seq_shard)

@@ -1,0 +1,208 @@
+"""Plan → GSPMD sharding rules.
+
+The production meshes are ``(data=16, model=16)`` per pod and
+``(pod=2, data=16, model=16)`` across pods.  A searched plan maps onto them
+as follows (DESIGN.md §3):
+
+  * TP level  -> parameters sharded along the ``model`` axis
+                 (column/row-parallel per Megatron; expert dim for MoE),
+  * SDP level -> parameters *additionally* sharded along ``data`` (+``pod``)
+                 — GSPMD inserts the ZeRO-3 all-gathers,
+  * DP level  -> batch dims sharded along ``data`` (+``pod``), params
+                 replicated across it,
+  * CKPT      -> jax.checkpoint per layer-stack segment,
+  * PP        -> the shard_map pipeline runtime (runtime/pipeline.py).
+
+Every rule checks divisibility and falls back to replication, so any
+(architecture x shape x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPolicy:
+    """How a plan's dominant strategy maps to the fixed mesh."""
+    tp: bool = True            # use the "model" axis for parameter sharding
+    zero: bool = True          # SDP: shard params over the batch axes too
+    remat_segments: Optional[Tuple[bool, ...]] = None
+    # beyond-paper knobs (perf iteration):
+    shard_cache_seq: bool = True   # decode KV cache: shard context over "model"
+    expert_axis: str = "model"     # mesh axis carrying the expert dimension
+    seq_shard: bool = False        # Megatron-style sequence parallelism on
+                                   # the residual stream (stash /16)
+
+    @staticmethod
+    def from_strategy(strategy, remat_segments=None) -> "ShardPolicy":
+        return ShardPolicy(tp=strategy.tp > 1, zero=strategy.sdp > 1,
+                           remat_segments=tuple(remat_segments or ()) or None)
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(mesh: Mesh, dim: int, axes) -> bool:
+    s = _axis_size(mesh, axes)
+    return s > 1 and dim % s == 0
+
+
+# parameter-name classes
+_COLUMN = {"wq", "wk", "wv", "w_gate", "w_up", "in_proj", "w_fc", "w1"}
+_ROW = {"wo", "w_down", "out_proj", "w_proj", "w2"}
+_EMBED = {"embed"}
+_HEAD = {"head"}
+_REPLICATED_HINT = {"router"}
+
+
+def _leaf_spec(path, leaf, mesh: Mesh, pol: ShardPolicy) -> P:
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+    names = [n for n in names if isinstance(n, str)]
+    name = names[-1] if names else ""
+    shape = leaf.shape
+    nd = len(shape)
+    bt = batch_axes(mesh)
+    model = "model" if ("model" in mesh.axis_names and pol.tp) else None
+    zero = bt if (pol.zero and bt) else None
+
+    def spec(*entries):
+        # pad to ndim with None
+        entries = list(entries) + [None] * (nd - len(entries))
+        return P(*entries[:nd])
+
+    if name in _REPLICATED_HINT or nd <= 1:
+        return P()
+
+    if name in _EMBED and nd == 2:
+        a0 = model if _fits(mesh, shape[0], model) else None
+        a1 = zero if _fits(mesh, shape[1], zero) else None
+        return P(a0, a1)
+    if name in _HEAD and nd == 2:
+        a1 = model if _fits(mesh, shape[1], model) else None
+        a0 = zero if _fits(mesh, shape[0], zero) else None
+        return P(a0, a1)
+    if name in ("enc_pos", "dec_pos"):
+        return P()
+
+    # MoE stacked experts: (L, E, d, f) / (L, E, f, d)
+    if name in (_COLUMN | _ROW) and nd == 4:
+        e_ax = pol.expert_axis if pol.tp or pol.expert_axis != "model" else None
+        e_ax = e_ax if _fits(mesh, shape[1], e_ax) else None
+        z_ax = zero if _fits(mesh, shape[2], zero) else None
+        return P(None, e_ax, z_ax, None)
+
+    if name in _COLUMN:
+        # (..., d_in, d_out): column parallel
+        a_out = model if _fits(mesh, shape[-1], model) else None
+        a_in = zero if _fits(mesh, shape[-2], zero) else None
+        return spec(*([None] * (nd - 2) + [a_in, a_out]))
+    if name in _ROW:
+        a_in = model if _fits(mesh, shape[-2], model) else None
+        a_out = zero if _fits(mesh, shape[-1], zero) else None
+        return spec(*([None] * (nd - 2) + [a_in, a_out]))
+
+    # default: try ZeRO-sharding the largest dim (skipping stacked L at 0)
+    if pol.zero and nd >= 2:
+        dims = list(range(1, nd)) or [0]
+        big = max(dims, key=lambda i: shape[i])
+        if _fits(mesh, shape[big], zero):
+            entries = [None] * nd
+            entries[big] = zero
+            return P(*entries)
+    return P()
+
+
+def param_shardings(abstract_params, mesh: Mesh, pol: ShardPolicy):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(mesh, _leaf_spec(path, leaf, mesh, pol)),
+        abstract_params)
+
+
+def opt_shardings(abstract_opt, mesh: Mesh, pol: ShardPolicy):
+    """Optimizer state mirrors the parameter shardings; step is replicated."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh,
+            P() if _path_has(path, "step") else _leaf_spec(path[1:], leaf, mesh, pol)),
+        abstract_opt)
+
+
+def _path_has(path, key: str) -> bool:
+    for k in path:
+        if getattr(k, "key", None) == key:
+            return True
+    return False
+
+
+def batch_shardings(abstract_batch, mesh: Mesh):
+    """Shard every leading batch dimension over the batch axes."""
+    bt = batch_axes(mesh)
+
+    def leaf(path, x):
+        if x.ndim >= 1 and bt and x.shape[0] % _axis_size(mesh, bt) == 0:
+            return NamedSharding(mesh, P(bt, *([None] * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_batch)
+
+
+def decode_state_shardings(abstract_state, mesh: Mesh, pol: ShardPolicy):
+    """KV caches: batch over data axes; context (or SSM heads) over model."""
+    bt = batch_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def leaf(path, x):
+        names = [getattr(k, "key", None) for k in path if getattr(k, "key", None)]
+        name = names[-1] if names else ""
+        nd = x.ndim
+        if name in ("k", "v") and nd >= 4:
+            # (L, B, C, KV, dh) stacked or (B, C, KV, dh) single
+            off = nd - 4
+            entries = [None] * nd
+            if bt and x.shape[off] % _axis_size(mesh, bt) == 0:
+                entries[off] = bt
+            if (pol.shard_cache_seq and model
+                    and x.shape[off + 1] % _axis_size(mesh, model) == 0):
+                entries[off + 1] = model
+            elif model and x.shape[off + 2] % _axis_size(mesh, model) == 0:
+                entries[off + 2] = model
+            return NamedSharding(mesh, P(*entries))
+        if name == "ssm" and nd >= 4:
+            off = nd - 4
+            entries = [None] * nd
+            if bt and x.shape[off] % _axis_size(mesh, bt) == 0:
+                entries[off] = bt
+            if model and x.shape[off + 1] % _axis_size(mesh, model) == 0:
+                entries[off + 1] = model
+            return NamedSharding(mesh, P(*entries))
+        if name == "conv" and nd >= 3:
+            off = nd - 3
+            entries = [None] * nd
+            if bt and x.shape[off] % _axis_size(mesh, bt) == 0:
+                entries[off] = bt
+            return NamedSharding(mesh, P(*entries))
+        if name == "cross_kv" or (nd >= 2 and name not in ("index",)):
+            entries = [None] * nd
+            off = 1 if nd >= 2 and x.shape[0] < 256 else 0   # stacked-L heuristic
+            if bt and nd > off and x.shape[off] % _axis_size(mesh, bt) == 0:
+                entries[off] = bt
+            return NamedSharding(mesh, P(*entries))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_state)

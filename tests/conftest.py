@@ -1,0 +1,34 @@
+"""Shared test utilities.
+
+NOTE: no XLA_FLAGS manipulation here — smoke tests and benches must see the
+real 1-device CPU platform.  Multi-device tests spawn subprocesses that set
+--xla_force_host_platform_device_count themselves (see test_distributed.py).
+"""
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+SRC = REPO / "src"
+
+
+def run_subprocess(code: str, *, devices: int = 8, timeout: int = 600):
+    """Run python code in a fresh process with N fake devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(SRC)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    import jax
+    return jax.random.PRNGKey(0)
