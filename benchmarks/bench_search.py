@@ -1,0 +1,129 @@
+"""Benchmark the Galvatron-BMW strategy-search engine.
+
+Times ``GalvatronOptimizer.optimize()`` on the paper model configs twice per
+config:
+
+  * **seed** — both speed knobs off (``enable_stage_cache=False``,
+    ``vectorized_cost=False``), which routes every stage search through the
+    seed reference implementation (per-(layer, strategy) scalar cost calls +
+    per-strategy Python DP loops) with no memoization anywhere; and
+  * **optimized** — the defaults: batched (L, S) NumPy cost tables cached
+    per (strategy set, micro-batch, inflight) and stage-search results
+    memoized on (layer-signature range, B_m, inflight, n_micro, set id).
+
+Both must return identical plans (checked); the wall-clock ratio is the
+tentpole speedup.  Results land in ``BENCH_search.json`` at the repo root.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_search.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from repro.configs.paper_models import paper_model_specs
+from repro.core import GalvatronOptimizer, galvatron_variant, paper_8gpu
+from repro.core.layerspec import dense_layer
+
+GB = 1024 ** 3
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def bert_huge_like(n_layers: int):
+    """Homogeneous BERT-Huge-like stack (paper Table I geometry)."""
+    return [dense_layer(f"l{i}", 512, 1280, 20, 20, 5120,
+                        causal=False, store_attn_matrix=True)
+            for i in range(n_layers)]
+
+
+def bench_configs(smoke: bool):
+    if smoke:
+        return [("bert-huge-like-8L-8dev", bert_huge_like(8),
+                 paper_8gpu().with_budget(8 * GB), dict(batch_grid=[16]))]
+    common = dict(batch_grid=[8, 16, 32], micro_candidates=3)
+    return [
+        ("bert-huge-like-16L-8dev", bert_huge_like(16),
+         paper_8gpu().with_budget(8 * GB), dict(common)),
+        ("bert-huge-32-8dev", paper_model_specs("bert-huge-32"),
+         paper_8gpu().with_budget(8 * GB), dict(common)),
+    ]
+
+
+def run_once(specs, cluster, tweaks, *, seed_mode: bool):
+    cfg = galvatron_variant("bmw")
+    cfg.micro_candidates = 2
+    for k, v in tweaks.items():
+        setattr(cfg, k, v)
+    if seed_mode:
+        cfg.enable_stage_cache = False
+        cfg.vectorized_cost = False
+    opt = GalvatronOptimizer(specs, cluster, cfg)
+    t0 = time.perf_counter()
+    plan = opt.optimize()
+    return plan, time.perf_counter() - t0, dict(opt.stats)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small config (CI)")
+    ap.add_argument("--repeats", type=int, default=2,
+                    help="timed repetitions per mode (min is reported)")
+    ap.add_argument("--out", default=str(REPO / "BENCH_search.json"))
+    args = ap.parse_args(argv)
+
+    results = {}
+    worst = float("inf")
+    for name, specs, cluster, tweaks in bench_configs(args.smoke):
+        t_new, t_seed = float("inf"), float("inf")
+        p_new = p_seed = None
+        stats = {}
+        for _ in range(max(1, args.repeats)):
+            p_new, t, stats = run_once(specs, cluster, tweaks,
+                                       seed_mode=False)
+            t_new = min(t_new, t)
+            p_seed, t, _ = run_once(specs, cluster, tweaks, seed_mode=True)
+            t_seed = min(t_seed, t)
+        same_plan = p_new == p_seed
+        same_tpt = (p_new is None and p_seed is None) or (
+            p_new is not None and p_seed is not None
+            and p_new.est_throughput == p_seed.est_throughput)
+        speedup = t_seed / t_new if t_new > 0 else float("inf")
+        worst = min(worst, speedup)
+        results[name] = {
+            "n_layers": len(specs),
+            "n_devices": cluster.n_devices,
+            "seed_seconds": round(t_seed, 4),
+            "optimized_seconds": round(t_new, 4),
+            "speedup": round(speedup, 2),
+            "identical_plan": bool(same_plan),
+            "identical_throughput": bool(same_tpt),
+            "est_throughput": p_new.est_throughput if p_new else None,
+            "stage_cache_hits": stats.get("stage_cache_hits"),
+            "stage_cache_misses": stats.get("stage_cache_misses"),
+            "table_builds": stats.get("table_builds"),
+        }
+        print(f"{name}: seed {t_seed:.3f}s  optimized {t_new:.3f}s  "
+              f"speedup {speedup:.1f}x  identical_plan={same_plan}")
+        if not (same_plan and same_tpt):
+            print(f"ERROR: {name}: plans diverged between modes",
+                  file=sys.stderr)
+            return 1
+
+    out = {
+        "benchmark": "strategy-search engine (stage memoization + "
+                     "vectorized cost tables) vs seed",
+        "smoke": args.smoke,
+        "min_speedup": round(worst, 2),
+        "configs": results,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out}  (min speedup {worst:.1f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,6 +1,6 @@
 """Galvatron-BMW core: automatic hybrid-parallelism search (the paper's
 primary contribution), in pure Python/NumPy — model- and runtime-agnostic."""
-from .cost_model import CostModel, CostModelConfig, LayerCosts
+from .cost_model import CostModel, CostModelConfig, CostTables, LayerCosts
 from .decision_tree import SearchSpace, construct_search_space, pp_degree_candidates
 from .dp_search import StageSearchResult, dp_search_stage
 from .hardware import (CLUSTERS, ClusterSpec, DeviceSpec, TPU_V5E,
@@ -15,6 +15,7 @@ from .pipeline_balance import (balance_degrees, inflight_microbatches,
                                memory_balanced_partition,
                                time_balanced_partition)
 from .plan import ParallelPlan
-from .strategy import DP, SDP, TP, Strategy, enumerate_strategies
+from .strategy import (DP, SDP, TP, Strategy, enumerate_strategies,
+                       strategy_set_id)
 
 __all__ = [k for k in dir() if not k.startswith("_")]

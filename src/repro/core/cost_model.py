@@ -21,7 +21,9 @@ Communication volume factors follow §III-A2:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Sequence
+
+import numpy as np
 
 from .hardware import ClusterSpec
 from .layerspec import LayerSpec
@@ -36,6 +38,31 @@ class LayerCosts:
     mem_b: float          # O_b bytes per device
     mem_ms: float         # O_ms bytes per device
     time_fwd: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostTables:
+    """Batched per-(layer, strategy) cost arrays, all shaped (L, S).
+
+    Produced by :meth:`CostModel.layer_cost_tables` with NumPy broadcasting —
+    numerically identical to calling :meth:`CostModel.layer_costs` /
+    :meth:`CostModel.reshard_cost` for every pair, but one vectorized pass
+    instead of ``L x S`` Python calls (the strategy-search hot path).
+    """
+
+    time_sync: np.ndarray     # LayerCosts.time
+    time_nosync: np.ndarray   # LayerCosts.time_nosync
+    time_fwd: np.ndarray      # LayerCosts.time_fwd
+    mem_f: np.ndarray
+    mem_b: np.ndarray
+    mem_ms: np.ndarray
+    reshard: np.ndarray       # CostModel.reshard_cost per (layer, strategy)
+
+    def rows(self, a: int, b: int) -> "CostTables":
+        """Zero-copy view of the layer range [a, b) — per-layer costs do not
+        depend on neighbouring layers, so full-model tables slice freely."""
+        return CostTables(*(getattr(self, f.name)[a:b]
+                            for f in dataclasses.fields(self)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -184,6 +211,114 @@ class CostModel:
             mem_b=mem_b,
             mem_ms=ms,
             time_fwd=fwd,
+        )
+
+    # ------------------------------------------------------------------
+    # batched entry — whole (L, S) cost tables in one NumPy pass
+    # ------------------------------------------------------------------
+    def layer_cost_tables(self, specs: Sequence[LayerSpec],
+                          strategies: Sequence[Strategy],
+                          micro_batch_size: float, *,
+                          inflight: int = 1) -> CostTables:
+        """Vectorized equivalent of ``layer_costs`` + ``reshard_cost`` over
+        every (layer, strategy) pair.
+
+        Broadcasts (L,)-shaped layer workload vectors against (S,)-shaped
+        strategy degree/bandwidth vectors; every arithmetic step mirrors the
+        scalar path operation-for-operation so results agree to the last ulp
+        (the memo-cache tests assert byte-identical search output).
+        """
+        cfg = self.cfg
+        dev = self.cluster.device
+        L, S = len(specs), len(strategies)
+        if L == 0 or S == 0:
+            z = np.zeros((L, S))
+            return CostTables(*(z.copy() for _ in range(7)))
+
+        # ---- per-strategy vectors (S,) --------------------------------
+        dp = np.array([s.dp for s in strategies], float)
+        sdp = np.array([s.sdp for s in strategies], float)
+        tp = np.array([s.tp for s in strategies], float)
+        total = np.array([s.total for s in strategies], float)
+        ckpt = np.array([s.ckpt for s in strategies], bool)
+        bw_tp = np.array([self._level_bandwidth(s, TP) for s in strategies])
+        bw_sdp = np.array([self._level_bandwidth(s, SDP) for s in strategies])
+        bw_dp = np.array([self._level_bandwidth(s, DP) for s in strategies])
+        bw_tot = np.array([self.cluster.bandwidth_for_group(int(s.total))
+                           for s in strategies])
+        ring_tp = np.where(tp > 1, (tp - 1) / tp, 0.0)
+        ring_sdp = np.where(sdp > 1, (sdp - 1) / sdp, 0.0)
+        ring_dp = np.where(dp > 1, (dp - 1) / dp, 0.0)
+        ring_tot = np.where(total > 1, (total - 1) / total, 0.0)
+
+        # ---- per-layer vectors (L, 1) ---------------------------------
+        col = lambda v: np.asarray(v, float).reshape(L, 1)
+        param_count = col([sp.param_count for sp in specs])
+        tp_frac = col([sp.tp_frac for sp in specs])
+        bnd = col([sp.bnd_bytes_per_sample for sp in specs])
+        intb = col([sp.int_bytes_per_sample for sp in specs])
+        flops = col([sp.flops_per_sample for sp in specs])
+        top_k = col([sp.top_k for sp in specs])
+        moe = np.array([sp.n_experts > 1 for sp in specs]).reshape(L, 1)
+        profiled = col([self.profiled_times.get(sp.name, np.nan)
+                        for sp in specs])
+
+        # ---- memory: model states -------------------------------------
+        b_dev = micro_batch_size / (dp * sdp)             # (S,)
+        params_dev = param_count * tp_frac / tp + param_count * (1.0 - tp_frac)
+        ms = cfg.bytes_per_param_states * params_dev / sdp
+
+        # ---- memory: activations --------------------------------------
+        bnd_dev = bnd * b_dev
+        int_dev = intb * b_dev / tp
+        int_dev = np.where(tp > 1,
+                           int_dev + cfg.tp_act_replicated_bnd * bnd_dev,
+                           int_dev)
+        mem_f = np.where(ckpt, bnd_dev * inflight, (bnd_dev + int_dev) * inflight)
+        mem_b = np.where(ckpt, int_dev, 0.0)
+
+        # ---- compute time ---------------------------------------------
+        comp_fwd = np.where(np.isnan(profiled),
+                            (flops * b_dev / tp) / (dev.peak_flops * cfg.mfu),
+                            np.nan_to_num(profiled) * b_dev / tp)
+        comp_bwd = 2.0 * comp_fwd
+        recompute = np.where(ckpt, comp_fwd, 0.0)
+
+        # ---- communication --------------------------------------------
+        ar = 2.0 * ring_tp * bnd_dev / bw_tp
+        tp_time = 2.0 * ar                                # fwd == bwd
+        if cfg.moe_expert_parallel_tp:
+            a2a = 2.0 * ring_tp / tp * bnd_dev * top_k / bw_tp
+            tp_time = np.where(moe, tp_time + 2.0 * a2a, tp_time)
+
+        pbytes = cfg.bytes_per_param * params_dev
+        sdp_ag = ring_sdp * pbytes / bw_sdp               # ag_fwd == ag_bwd == rs
+        dp_ar = 2.0 * ring_dp * pbytes / bw_dp
+
+        # ---- assemble (overlap model, §V) ------------------------------
+        sd = dev.overlap_slowdown
+
+        def overlap(comp, comm):
+            return np.where(comp <= 0.0, comm,
+                            np.where(comm <= 0.0, comp,
+                                     np.maximum(comp * sd, comm * sd)))
+
+        fwd = overlap(comp_fwd, sdp_ag) + tp_time
+        re_fwd = np.where(ckpt, recompute + tp_time, 0.0)
+        bwd_nosync = overlap(comp_bwd, sdp_ag) + tp_time
+        bwd_sync = overlap(comp_bwd, sdp_ag + sdp_ag + dp_ar) + tp_time
+
+        # ---- reshard (layout-transformation) cost ----------------------
+        reshard = 2.0 * ring_tot * (bnd * micro_batch_size / total) / bw_tot
+
+        return CostTables(
+            time_sync=fwd + re_fwd + bwd_sync,
+            time_nosync=fwd + re_fwd + bwd_nosync,
+            time_fwd=fwd,
+            mem_f=mem_f,
+            mem_b=mem_b,
+            mem_ms=ms,
+            reshard=reshard,
         )
 
     # ------------------------------------------------------------------

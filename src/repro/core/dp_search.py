@@ -22,11 +22,44 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
-from .cost_model import CostModel
+from .cost_model import CostModel, CostTables
 from .layerspec import LayerSpec
-from .strategy import Strategy
+from .strategy import Strategy, strategy_set_id
 
 INF = float("inf")
+
+# cached per strategy set: levels-group structure of the transformation cost
+_GROUP_INFO_CACHE = {}
+
+
+def _group_info(strategies: Sequence[Strategy]):
+    """Group strategies by identical levels (R == 0 within a group).
+
+    enumerate_strategies lists each levels-group contiguously (ckpt pairs);
+    when that holds, per-group minima collapse to one reduceat call — and
+    when every group additionally has the same size (the common all-ckpt /
+    no-ckpt spaces) to an even cheaper reshape + min over the last axis.
+    The structure only depends on the strategy list, so it is computed once
+    per set.
+    """
+    sid = strategy_set_id(strategies)
+    info = _GROUP_INFO_CACHE.get(sid)
+    if info is None:
+        S = len(strategies)
+        level_key = {}
+        group_of = np.zeros(S, dtype=np.int64)
+        for j, s in enumerate(strategies):
+            group_of[j] = level_key.setdefault(s.levels, len(level_key))
+        G = len(level_key)
+        group_members = [np.where(group_of == g)[0] for g in range(G)]
+        contiguous = bool(np.all(np.diff(group_of) >= 0))
+        group_starts = (np.searchsorted(group_of, np.arange(G))
+                        if contiguous else None)
+        uniform = contiguous and S % G == 0 and bool(
+            np.all(np.diff(group_starts) == S // G)) if G else False
+        info = (group_of, G, group_members, contiguous, group_starts, uniform)
+        _GROUP_INFO_CACHE[sid] = info
+    return info
 
 
 @dataclasses.dataclass
@@ -52,6 +85,191 @@ def _exact_e_all(mem_f: np.ndarray, mem_b: np.ndarray, mem_ms: np.ndarray,
 
 
 def dp_search_stage(
+    specs: Sequence[LayerSpec],
+    strategies: Sequence[Strategy],
+    cost_model: CostModel,
+    micro_batch_size: float,
+    budget_bytes: float,
+    *,
+    inflight: int = 1,
+    n_bins: int = 256,
+    n_micro: int = 1,
+    tables: Optional[CostTables] = None,
+    use_tables: bool = True,
+) -> StageSearchResult:
+    """Search the optimal per-layer strategies for one pipeline stage.
+
+    The DP objective is the m-amortized per-micro-batch time
+    ``t_nosync + (t_sync - t_nosync)/m`` — Eq. 9 charges the grad-sync cost
+    only on the last of ``n_micro`` micro-batches, so optimizing raw sync
+    time would mis-rank strategies with expensive gradient synchronization
+    but cheap steady-state micro-batches.
+
+    ``tables`` takes precomputed (L, S) cost arrays (e.g. a row-slice of the
+    full-model tables the optimizer caches per (B_m, inflight));
+    ``use_tables=False`` dispatches to the seed reference implementation
+    (per-pair scalar cost calls + per-strategy Python DP loops), kept as the
+    benchmark baseline and differential-test oracle.
+    """
+    if tables is None and not use_tables:
+        return dp_search_stage_reference(
+            specs, strategies, cost_model, micro_batch_size, budget_bytes,
+            inflight=inflight, n_bins=n_bins, n_micro=n_micro)
+
+    L, S = len(specs), len(strategies)
+    if L == 0:
+        return StageSearchResult(True, 0.0, 0.0, [], 0.0, 0.0, 0.0)
+
+    # ---- per (layer, strategy) cost tables -----------------------------
+    if tables is None:
+        tables = cost_model.layer_cost_tables(
+            specs, strategies, micro_batch_size, inflight=inflight)
+    time_sync, time_ns = tables.time_sync, tables.time_nosync
+    mem_f, mem_b, mem_ms = tables.mem_f, tables.mem_b, tables.mem_ms
+    reshard = tables.reshard
+    # DP objective (m-amortized)
+    time = time_ns + (time_sync - time_ns) / max(1, n_micro)
+
+    # quantized forward-memory weight of each (layer, strategy)
+    bin_bytes = max(budget_bytes / n_bins, 1.0)
+    w = np.ceil((mem_f + mem_ms) / bin_bytes).astype(np.int64)   # bins
+    # No chain can weigh more than the sum of per-layer maxima (counting
+    # only strategies that fit at all), so budget bins above that cap hold
+    # exactly the same DP column as the cap bin — shrink the budget axis to
+    # it.  The descending E_fwd scan then starts at the cap, which returns
+    # the same chain the full-height scan would (identical C columns above).
+    w_valid = np.where(w <= n_bins, w, -1)
+    per_layer_max = w_valid.max(axis=1)
+    if (per_layer_max < 0).any():       # some layer fits under no strategy
+        return StageSearchResult(False, INF, INF, [], INF, INF, 0.0)
+    E = int(min(n_bins, per_layer_max.sum()))
+
+    (group_of, G, group_members, contiguous, group_starts,
+     uniform) = _group_info(strategies)
+
+    # ---- DP over (budget_bin, strategy) ---------------------------------
+    # C[e, j]: min time of layers processed so far using total fwd-mem <= e
+    # bins, with the last layer using strategy j.  The per-layer transition
+    # is fully vectorized over (budget_bin, strategy): candidate values are
+    # computed at every unshifted budget e', then each strategy column is
+    # shifted down by its own weight w[l, j] with one fancy-index gather.
+    # No parent pointers are materialized — backtracking re-derives each
+    # predecessor from the kept per-layer C tables (cheaper than building
+    # (L, E+1, S) argmin tables that are read at most once per chain link).
+    ebins = np.arange(E + 1)
+    cols = np.arange(S)
+    # layers with identical strategy weights (homogeneous stacks) share the
+    # same shifted-gather indices — build them once per distinct w row
+    shift_cache = {}
+
+    def shift_for(l: int):
+        key = w[l].tobytes()
+        cached = shift_cache.get(key)
+        if cached is None:
+            idx = ebins[:, None] - w[l][None, :]    # source bin per (e, j)
+            invalid = (idx < 0).ravel()             # also when w[l,j] > E
+            np.clip(idx, 0, E, out=idx)
+            flat = (idx * S + cols[None, :]).ravel()
+            cached = shift_cache[key] = (flat, invalid)
+        return cached
+
+    states = []                                  # C after each layer
+    C = None
+    for l in range(L):
+        flat, invalid = shift_for(l)
+        if l == 0:
+            Cn = np.broadcast_to(time[0][None, :], (E + 1, S)).copy()
+        else:
+            if uniform and S == 2 * G:          # ckpt pairs: one binary ufunc
+                red = np.minimum(C[:, ::2], C[:, 1::2])
+            elif uniform:
+                red = C.reshape(E + 1, G, S // G).min(axis=2)
+            elif contiguous:
+                red = np.minimum.reduceat(C, group_starts, axis=1)
+            else:
+                red = np.empty((E + 1, G))
+                for g, members in enumerate(group_members):
+                    red[:, g] = C[:, members].min(axis=1)
+            best_all = red.min(axis=1)                       # == C.min(axis=1)
+            best_grp = red[:, group_of]                      # (E+1, S)
+            cross = best_all[:, None] + reshard[l][None, :]  # (E+1, S)
+            val = np.minimum(best_grp, cross) + time[l][None, :]
+            Cn = val.ravel().take(flat).reshape(E + 1, S)
+        Cn.ravel()[invalid] = INF
+        states.append(Cn)
+        C = Cn
+
+    # ---- E_fwd sweep with exact E_all validation (Alg. 3) ---------------
+    b_up = float(np.max(mem_b)) if L else 0.0    # paper's b_up (max over l, S)
+
+    final_best = C.min(axis=1)                   # per budget bin
+    final_arg = C.argmin(axis=1)
+    feasible_bins = np.isfinite(final_best)
+
+    def backtrack(e_bin: int) -> np.ndarray:
+        """Re-derive the optimal chain ending at budget bin ``e_bin``.
+
+        The predecessor of (l, e, j) is recomputed from C_{l-1}[e - w[l,j]]
+        with the same same-group-vs-reshard comparison (and the same argmin
+        tie-breaking) the forward pass used, so the recovered chain is
+        identical to one backtracked through stored parent pointers.
+        """
+        chain = np.empty(L, dtype=np.int64)
+        j = int(final_arg[e_bin])
+        e = e_bin
+        chain[L - 1] = j
+        for l in range(L - 1, 0, -1):
+            e -= int(w[l, j])
+            v = states[l - 1][e]
+            members = group_members[group_of[j]]
+            sub = v[members]
+            kg = int(sub.argmin())
+            ka = int(v.argmin())
+            if sub[kg] <= v[ka] + reshard[l, j]:
+                j = int(members[kg])
+            else:
+                j = ka
+            chain[l - 1] = j
+        return chain
+
+    for e_bin in range(E, -1, -1):
+        if not feasible_bins[e_bin]:
+            continue
+        chain = backtrack(e_bin)
+        e_all = _exact_e_all(mem_f, mem_b, mem_ms, chain)
+        e_fwd_exact = float(sum(mem_f[l, chain[l]] + mem_ms[l, chain[l]]
+                                for l in range(L)))
+        if e_all <= budget_bytes or e_bin * bin_bytes <= budget_bytes - b_up:
+            idx = np.arange(L)
+            t_sync = float(time_sync[idx, chain].sum())
+            t_nosync = float(time_ns[idx, chain].sum())
+            # add reshard costs along the chain (levels change ⇔ group changes)
+            extra = 0.0
+            for l in range(1, L):
+                if group_of[chain[l]] != group_of[chain[l - 1]]:
+                    extra += reshard[l, chain[l]]
+            ms_total = float(mem_ms[idx, chain].sum())
+            return StageSearchResult(
+                feasible=True,
+                time=t_sync + extra,
+                time_nosync=t_nosync + extra,
+                strategies=[strategies[j] for j in chain],
+                e_all=e_all,
+                e_fwd=e_fwd_exact,
+                mem_states=ms_total,
+            )
+
+    return StageSearchResult(False, INF, INF, [], INF, INF, 0.0)
+
+
+# --------------------------------------------------------------------------
+# Seed reference implementation (pre-vectorization), verbatim.
+#
+# Kept for two reasons: it is the baseline `benchmarks/bench_search.py`
+# measures the tentpole speedup against, and the differential-test oracle
+# the vectorized path must match bit-for-bit (tests/test_search_cache.py).
+# --------------------------------------------------------------------------
+def dp_search_stage_reference(
     specs: Sequence[LayerSpec],
     strategies: Sequence[Strategy],
     cost_model: CostModel,

@@ -20,9 +20,9 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost_model import CostModel, CostModelConfig
+from .cost_model import CostModel, CostModelConfig, CostTables
 from .decision_tree import SearchSpace, construct_search_space
-from .dp_search import dp_search_stage
+from .dp_search import StageSearchResult, dp_search_stage
 from .hardware import ClusterSpec
 from .layerspec import LayerSpec
 from .pipeline_balance import (PartitionEval, adjust_partition,
@@ -31,7 +31,7 @@ from .pipeline_balance import (PartitionEval, adjust_partition,
                                time_balanced_partition,
                                validate_adjustment)
 from .plan import ParallelPlan
-from .strategy import PARADIGMS, Strategy
+from .strategy import PARADIGMS, Strategy, strategy_set_id
 
 INF = float("inf")
 
@@ -54,6 +54,10 @@ class OptimizerConfig:
     fixed_strategy: Optional[Strategy] = None  # pure-baseline mode
     fixed_pp: Optional[int] = None
     max_adjust_iters: int = 32                 # BMW queue budget per (B, P)
+    # search-engine speed knobs (both default on; turning them off recovers
+    # the original per-candidate / per-pair behaviour for benchmarking)
+    enable_stage_cache: bool = True            # memoize dp_search_stage results
+    vectorized_cost: bool = True               # batched (L,S) cost tables
 
 
 def default_batch_grid(max_batch: int) -> List[int]:
@@ -81,7 +85,39 @@ class GalvatronOptimizer:
             max_pp=(1 if not self.cfg.use_pp else self.cfg.max_pp),
             max_tp=self.cfg.max_tp,
         )
-        self.stats: Dict[str, float] = {"stage_searches": 0, "search_seconds": 0.0}
+        self.stats: Dict[str, float] = {
+            "stage_searches": 0,        # dp_search_stage requests
+            "stage_cache_hits": 0,
+            "stage_cache_misses": 0,
+            "table_builds": 0,          # full-model (L,S) cost-table builds
+            "table_hits": 0,
+            "search_seconds": 0.0,
+        }
+        # memo caches (tentpole): stage-search results keyed on
+        # (layer-range, B_m, inflight, n_micro, strategy-set id) and
+        # full-model cost tables keyed on (strategy-set id, B_m, inflight).
+        # budget / n_bins / schedule are fixed per optimizer instance, so
+        # they are deliberately not part of the keys.
+        self._stage_cache: Dict[Tuple, StageSearchResult] = {}
+        self._table_cache: Dict[Tuple, CostTables] = {}
+        self._ref_cache: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
+        self._part_cache: Dict[Tuple, Tuple[List[int], List[int]]] = {}
+        # both speed knobs off = seed-faithful baseline (used by
+        # benchmarks/bench_search.py): no memoization anywhere
+        self._seed_mode = (not self.cfg.enable_stage_cache
+                           and not self.cfg.vectorized_cost)
+        # layer-content signatures: stage-search results depend on the layer
+        # *workloads* in a range, not their positions, so ranges covering
+        # identical layer runs (ubiquitous in homogeneous transformer
+        # stacks) share one cache entry.  The name enters costs only via the
+        # profiled-time lookup, so it is replaced by that lookup's value.
+        sig_of: Dict[Tuple, int] = {}
+        self._layer_sig = tuple(
+            sig_of.setdefault(
+                (dataclasses.replace(sp, name=""),
+                 self.cost.profiled_times.get(sp.name)),
+                len(sig_of))
+            for sp in self.specs)
 
     # ------------------------------------------------------------------
     # layer-level reference costs (used for initial partitions)
@@ -91,34 +127,107 @@ class GalvatronOptimizer:
         """Per-layer (time, act-memory) under a cheap reference strategy —
         pure data parallel over the stage group (paper's load-balancing
         guideline: #layers/params/exec-time)."""
+        key = (micro_batch, group)
+        cached = None if self._seed_mode else self._ref_cache.get(key)
+        if cached is not None:
+            return cached
         ref = Strategy((("dp", group),)) if group > 1 else Strategy(())
-        t = np.zeros(len(self.specs))
-        m = np.zeros(len(self.specs))
-        for i, s in enumerate(self.specs):
-            c = self.cost.layer_costs(s, ref, micro_batch)
-            t[i] = c.time_nosync
-            m[i] = c.mem_f + c.mem_ms
+        if self.cfg.vectorized_cost:
+            tb = self.cost.layer_cost_tables(self.specs, [ref], micro_batch)
+            t = tb.time_nosync[:, 0].copy()
+            m = (tb.mem_f + tb.mem_ms)[:, 0]
+        else:
+            t = np.zeros(len(self.specs))
+            m = np.zeros(len(self.specs))
+            for i, s in enumerate(self.specs):
+                c = self.cost.layer_costs(s, ref, micro_batch)
+                t[i] = c.time_nosync
+                m[i] = c.mem_f + c.mem_ms
+        self._ref_cache[key] = (t, m)
         return t, m
+
+    # ------------------------------------------------------------------
+    # memoized single-stage search
+    # ------------------------------------------------------------------
+    def _full_tables(self, strategies: List[Strategy], sid: int,
+                     B_m: float, inflight: int) -> Optional[CostTables]:
+        """Whole-model (L, S) cost tables, cached per (B_m, inflight) — every
+        stage search over any layer range row-slices the same arrays."""
+        if not self.cfg.vectorized_cost:
+            return None
+        key = (sid, B_m, inflight)
+        tb = self._table_cache.get(key)
+        if tb is None:
+            # inflight multiplies exactly one table entry — the forward
+            # activation stash mem_f is linear in it (the cost model keeps
+            # everything else inflight-independent) — so only the inflight=1
+            # base is ever built and others are derived by scaling
+            base = self._table_cache.get((sid, B_m, 1))
+            if base is None:
+                base = self.cost.layer_cost_tables(self.specs, strategies,
+                                                   B_m, inflight=1)
+                self._table_cache[(sid, B_m, 1)] = base
+                self.stats["table_builds"] += 1
+            else:
+                self.stats["table_hits"] += 1
+            tb = (base if inflight == 1 else
+                  dataclasses.replace(base, mem_f=base.mem_f * inflight))
+            self._table_cache[key] = tb
+        else:
+            self.stats["table_hits"] += 1
+        return tb
+
+    def _stage_search(self, a: int, b: int, strategies: List[Strategy],
+                      sid: int, B_m: float, inflight: int,
+                      n_micro: int) -> StageSearchResult:
+        """dp_search_stage over specs[a:b], memoized.
+
+        The BMW adjustment queue mostly re-evaluates identical layer ranges
+        (a one-layer boundary shift changes only the two adjacent stages),
+        and the p_t / p_m seed partitions overlap heavily — so the cache
+        turns most of the O(P) work per candidate into dict lookups.
+        """
+        self.stats["stage_searches"] += 1
+        key = (self._layer_sig[a:b], B_m, inflight, n_micro, sid)
+        if self.cfg.enable_stage_cache:
+            res = self._stage_cache.get(key)
+            if res is not None:
+                self.stats["stage_cache_hits"] += 1
+                return res
+            self.stats["stage_cache_misses"] += 1
+        tables = self._full_tables(strategies, sid, B_m, inflight)
+        res = dp_search_stage(
+            self.specs[a:b], strategies, self.cost, B_m,
+            self.cluster.budget(), inflight=inflight,
+            n_bins=self.cfg.n_bins, n_micro=n_micro,
+            tables=tables.rows(a, b) if tables is not None else None,
+            use_tables=self.cfg.vectorized_cost)
+        if self.cfg.enable_stage_cache:
+            self._stage_cache[key] = res
+        return res
+
+    def _strategies_for(self, P: int) -> Tuple[List[Strategy], int]:
+        strategies = self.search_space.strategies(P)
+        if self.cfg.fixed_strategy is not None:
+            strategies = [self.cfg.fixed_strategy]
+        return strategies, strategy_set_id(strategies)
 
     # ------------------------------------------------------------------
     # per-(B, P, m, partition) evaluation == Galvatron_Search (Alg. 1 l.17)
     # ------------------------------------------------------------------
     def _eval_partition(self, partition: Sequence[int], B: int, m: int,
-                        P: int) -> Tuple[float, PartitionEval, List[Strategy]]:
-        budget = self.cluster.budget()
+                        P: int, strategies: Optional[List[Strategy]] = None,
+                        sid: Optional[int] = None,
+                        ) -> Tuple[float, PartitionEval, List[Strategy]]:
         B_m = B / m
-        strategies = self.search_space.strategies(P)
-        if self.cfg.fixed_strategy is not None:
-            strategies = [self.cfg.fixed_strategy]
+        if strategies is None or sid is None:
+            strategies, sid = self._strategies_for(P)
         bounds = stage_bounds(partition)
         stage_times, stage_ns, stage_mems, all_strats = [], [], [], []
         feasible = True
         for i, (a, b) in enumerate(bounds):
             infl = inflight_microbatches(i, P, m, self.cfg.schedule)
-            res = dp_search_stage(self.specs[a:b], strategies, self.cost,
-                                  B_m, budget, inflight=infl,
-                                  n_bins=self.cfg.n_bins, n_micro=m)
-            self.stats["stage_searches"] += 1
+            res = self._stage_search(a, b, strategies, sid, B_m, infl, m)
             if not res.feasible:
                 feasible = False
                 stage_times.append(INF)
@@ -162,19 +271,28 @@ class GalvatronOptimizer:
         if P > L:
             return None
         best: Optional[ParallelPlan] = None
+        strategies, sid = self._strategies_for(P)
         for m in self._micro_candidates(B, P):
             B_m = B / m
             group = self.cluster.n_devices // P
-            t_ref, m_ref = self._reference_layer_costs(B_m, group)
             if P == 1:
                 partitions = [[L]]
                 pt_max_mem = INF
             else:
-                p_m = memory_balanced_partition(m_ref, P, m, self.cfg.schedule)
-                p_t = time_balanced_partition(t_ref, P)
+                pkey = (B_m, group, P, m)
+                seeds = None if self._seed_mode else self._part_cache.get(pkey)
+                if seeds is None:
+                    t_ref, m_ref = self._reference_layer_costs(B_m, group)
+                    seeds = (
+                        memory_balanced_partition(m_ref, P, m,
+                                                  self.cfg.schedule),
+                        time_balanced_partition(t_ref, P),
+                    )
+                    self._part_cache[pkey] = seeds
+                p_m, p_t = seeds
                 # pt_max_mem: criterion (3) reference — max stage memory
                 # under the time-balanced partition
-                _, ev_t, _ = self._eval_partition(p_t, B, m, P)
+                _, ev_t, _ = self._eval_partition(p_t, B, m, P, strategies, sid)
                 pt_max_mem = max(ev_t.stage_mems) if ev_t.feasible else INF
                 # Alg. 2 seeds the queue with p_m and adjusts toward p_t;
                 # p_t itself is also evaluated (the optimum lies between the
@@ -186,7 +304,8 @@ class GalvatronOptimizer:
             while queue and iters <= self.cfg.max_adjust_iters:
                 part = queue.pop(0)
                 iters += 1
-                t, ev, strats = self._eval_partition(part, B, m, P)
+                t, ev, strats = self._eval_partition(part, B, m, P,
+                                                     strategies, sid)
                 if ev.feasible and t < INF:
                     if best is None or B / t > best.est_throughput:
                         a_t, a_m = balance_degrees(ev.stage_times, ev.stage_mems)
@@ -203,7 +322,8 @@ class GalvatronOptimizer:
                             key = tuple(cand)
                             if key in seen:
                                 continue
-                            t2, ev2, _ = self._eval_partition(cand, B, m, P)
+                            t2, ev2, _ = self._eval_partition(cand, B, m, P,
+                                                              strategies, sid)
                             if validate_adjustment(
                                     ev2, max(ev.stage_times),
                                     self.cluster.budget(), pt_max_mem):
@@ -238,6 +358,8 @@ class GalvatronOptimizer:
             if consecutive_oom >= 2:     # everything OOMs: stop enlarging B
                 break
         self.stats["search_seconds"] = _time.time() - t0
+        if best is not None:
+            best.search_stats = dict(self.stats)
         return best
 
 

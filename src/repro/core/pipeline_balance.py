@@ -56,25 +56,20 @@ def _partition_minimize_max(loads: np.ndarray, P: int,
     """
     L = len(loads)
     prefix = np.concatenate([[0.0], np.cumsum(loads)])
-
-    def seg(a: int, b: int, stage: int) -> float:
-        w = stage_weight(stage) if stage_weight else 1.0
-        return (prefix[b] - prefix[a]) * w
+    weight = [stage_weight(i) if stage_weight else 1.0 for i in range(P)]
 
     # dp[i][l] = min over partitions of first l layers into i+1 stages of max load
     dp = np.full((P, L + 1), INF)
     cut = np.zeros((P, L + 1), dtype=np.int64)
-    for l in range(1, L + 1):
-        dp[0, l] = seg(0, l, 0)
+    dp[0, 1:] = (prefix[1:] - prefix[0]) * weight[0]
     for i in range(1, P):
+        # vectorized over the cut point k: stage i spans (k, l]
         for l in range(i + 1, L + 1):
-            best, bestk = INF, i
-            for k in range(i, l):
-                v = max(dp[i - 1, k], seg(k, l, i))
-                if v < best:
-                    best, bestk = v, k
-            dp[i, l] = best
-            cut[i, l] = bestk
+            ks = np.arange(i, l)
+            v = np.maximum(dp[i - 1, ks], (prefix[l] - prefix[ks]) * weight[i])
+            bk = int(v.argmin())
+            dp[i, l] = v[bk]
+            cut[i, l] = i + bk
     # backtrack
     parts = []
     l = L

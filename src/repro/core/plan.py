@@ -28,6 +28,11 @@ class ParallelPlan:
     alpha_t: float = 0.0
     alpha_m: float = 0.0
     searched_by: str = "galvatron-bmw"
+    # search-engine telemetry (stage-search / cache-hit counts, wall time);
+    # excluded from equality so cached and uncached searches that find the
+    # same plan compare equal
+    search_stats: Optional[Dict[str, float]] = dataclasses.field(
+        default=None, compare=False)
 
     @property
     def micro_batch_size(self) -> int:
@@ -67,6 +72,7 @@ class ParallelPlan:
             "alpha_t": self.alpha_t,
             "alpha_m": self.alpha_m,
             "searched_by": self.searched_by,
+            "search_stats": self.search_stats,
         }
 
     def dumps(self) -> str:
@@ -88,6 +94,7 @@ class ParallelPlan:
             alpha_t=d.get("alpha_t", 0.0),
             alpha_m=d.get("alpha_m", 0.0),
             searched_by=d.get("searched_by", "galvatron-bmw"),
+            search_stats=d.get("search_stats"),
         )
 
     @staticmethod

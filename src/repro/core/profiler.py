@@ -19,8 +19,7 @@ from .layerspec import LayerSpec
 
 
 def _time_fn(fn, *args, iters: int = 3) -> float:
-    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
-        jax.block_until_ready(fn(*args))
+    jax.block_until_ready(fn(*args))   # warm up once (compile + first run)
     t0 = time.perf_counter()
     for _ in range(iters):
         jax.block_until_ready(fn(*args))

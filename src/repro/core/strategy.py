@@ -82,6 +82,29 @@ class Strategy:
         return Strategy(tuple((p, int(k)) for p, k in d["levels"]), bool(d["ckpt"]))
 
 
+# --------------------------------------------------------------------------
+# strategy-set identity (memo-cache keys)
+# --------------------------------------------------------------------------
+
+_SET_IDS: Dict[Tuple[Strategy, ...], int] = {}
+
+
+def strategy_set_id(strategies: Sequence[Strategy]) -> int:
+    """Small interned token identifying an ordered strategy list.
+
+    Equal lists (same strategies, same order) always map to the same token,
+    so search caches can key on one int instead of re-hashing the whole
+    list on every lookup.  The intern table is tiny: one entry per distinct
+    search space actually constructed in the process.
+    """
+    key = tuple(strategies)
+    sid = _SET_IDS.get(key)
+    if sid is None:
+        sid = len(_SET_IDS)
+        _SET_IDS[key] = sid
+    return sid
+
+
 def _factorizations(n: int, max_parts: int) -> Iterable[Tuple[int, ...]]:
     """Ordered compositions of ``n`` into ≤ max_parts factors, each ≥ 2.
 

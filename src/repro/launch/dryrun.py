@@ -99,6 +99,9 @@ def _compile_step(cfg: ModelConfig, shape, mesh,
 def _per_device_costs(compiled) -> Dict[str, float]:
     from repro.roofline import collective_bytes_from_hlo
     cost = compiled.cost_analysis()
+    # jax <= 0.4.x returns [{...}] (one dict per partition), newer a dict
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
     colls = collective_bytes_from_hlo(compiled.as_text())
     return {
         "flops": float(cost.get("flops", 0.0)),

@@ -1,0 +1,112 @@
+"""Tiny deterministic stand-in for ``hypothesis`` so the property tests keep
+running (with reduced coverage) when the real package is not installed.
+
+Usage in test modules::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_compat import given, settings, st
+
+Each strategy deterministically enumerates/samples values from a seeded RNG,
+and ``@given`` expands into a plain loop over ``max_examples`` drawn tuples —
+no shrinking, no database, but the same test body runs on a spread of inputs
+and failures print the offending example.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable, List, Sequence
+
+_DEFAULT_MAX_EXAMPLES = 20
+
+
+class _Strategy:
+    """A deterministic value sampler (mirrors hypothesis' SearchStrategy)."""
+
+    def __init__(self, draw: Callable[[random.Random], Any],
+                 edge_cases: Sequence[Any] = ()):
+        self._draw = draw
+        self._edge_cases = list(edge_cases)
+
+    def example_stream(self, rng: random.Random, n: int) -> List[Any]:
+        out = list(self._edge_cases[:n])
+        while len(out) < n:
+            out.append(self._draw(rng))
+        return out
+
+
+class strategies:
+    """Namespace matching ``hypothesis.strategies`` for the subset we use."""
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 30) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value),
+                         edge_cases=[min_value, max_value])
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value),
+                         edge_cases=[min_value, max_value])
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda r: bool(r.getrandbits(1)),
+                         edge_cases=[False, True])
+
+    @staticmethod
+    def sampled_from(options: Sequence[Any]) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda r: r.choice(options), edge_cases=options)
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(r: random.Random) -> List[Any]:
+            n = r.randint(min_size, max_size)
+            return [elements._draw(r) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = strategies
+
+
+def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+             deadline: Any = None, **_ignored):
+    """Decorator: attach the example budget to the test function."""
+    def wrap(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return wrap
+
+
+def given(*strats: _Strategy):
+    """Decorator: run the test once per deterministically drawn input tuple."""
+    def wrap(fn):
+        # like real hypothesis, strategies bind right-to-left: the LAST
+        # len(strats) parameters receive drawn values (by keyword), and any
+        # leading parameters stay visible to pytest as fixtures
+        params = list(inspect.signature(fn).parameters.values())
+        n_bound = len(strats)
+        bound_names = [p.name for p in params[len(params) - n_bound:]]
+
+        @functools.wraps(fn)
+        def runner(*args, **kwargs):
+            n = getattr(fn, "_compat_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = random.Random(0)
+            streams = [s.example_stream(rng, n) for s in strats]
+            for example in zip(*streams):
+                try:
+                    fn(*args, **dict(zip(bound_names, example)), **kwargs)
+                except Exception:
+                    print(f"Falsifying example ({fn.__name__}): {example!r}")
+                    raise
+        # hide the strategy-bound params from pytest's fixture resolution
+        # (real hypothesis rewrites the signature the same way)
+        runner.__signature__ = inspect.Signature(
+            params[:len(params) - n_bound])
+        del runner.__wrapped__
+        return runner
+    return wrap

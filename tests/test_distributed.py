@@ -9,8 +9,7 @@ from conftest import run_subprocess
 def test_executor_tp_zero_training_8dev():
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((4, 2), ("data", "model"))
 from repro.configs import get_config
 from repro.runtime import ShardPolicy, make_train_step, init_train_state
 from repro.data import DataConfig, synthetic_lm_batches, batch_specs
@@ -39,8 +38,7 @@ print("OK")
 def test_pipeline_runtime_matches_reference_8dev():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((4, 2), ("pipe", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((4, 2), ("pipe", "data"))
 from repro.configs import get_config
 from repro.models import init_lm, lm_loss
 from repro.runtime.pipeline import make_pipeline_loss, stage_split_params
@@ -73,8 +71,7 @@ print("OK")
 def test_moe_expert_parallel_serving_8dev():
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 from repro.configs import get_config
 from repro.runtime import ShardPolicy, make_serve_step
 from repro.models import init_lm, init_decode_state
@@ -115,8 +112,7 @@ def test_dryrun_entrypoint_tiny():
 def test_moe_shmap_dispatch_matches_einsum_16dev():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((4, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((4, 4), ("data", "model"))
 from repro.configs import get_config
 from repro.models.flags import batch_sharding
 from repro.models.moe import init_moe, moe_ffn
@@ -141,8 +137,7 @@ def test_seq_shard_policy_same_loss_8dev():
     identical to the baseline (it only moves shardings)."""
     out = run_subprocess("""
 import jax, jax.numpy as jnp
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
 from repro.configs import get_config
 from repro.runtime import ShardPolicy, make_train_step, init_train_state
 from repro.data import DataConfig, synthetic_lm_batches, batch_specs
@@ -174,8 +169,7 @@ print("OK")
 def test_pipeline_1f1b_memory_schedule_matches_gpipe_8dev():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
-mesh = jax.make_mesh((4, 2), ("pipe", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = jax.make_mesh((4, 2), ("pipe", "data"))
 from repro.configs import get_config
 from repro.models import init_lm
 from repro.runtime.pipeline import make_pipeline_loss, stage_split_params
