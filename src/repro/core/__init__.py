@@ -1,6 +1,7 @@
 """Galvatron-BMW core: automatic hybrid-parallelism search (the paper's
 primary contribution), in pure Python/NumPy — model- and runtime-agnostic."""
-from .cost_model import CostModel, CostModelConfig, CostTables, LayerCosts
+from .cost_model import (CostModel, CostModelConfig, CostTables, LayerCosts,
+                         bubble_fraction, pipeline_iter_time)
 from .decision_tree import SearchSpace, construct_search_space, pp_degree_candidates
 from .dp_search import StageSearchResult, dp_search_stage
 from .hardware import (CLUSTERS, ClusterSpec, DeviceSpec, TPU_V5E,

@@ -30,6 +30,40 @@ from .layerspec import LayerSpec
 from .strategy import DP, SDP, TP, Strategy
 
 
+# --------------------------------------------------------------------------
+# pipeline-schedule time terms (paper Eq. 5/9, generalized with interleaved
+# virtual stages — DESIGN.md §5)
+# --------------------------------------------------------------------------
+
+def bubble_fraction(n_stages: int, n_micro: int, vpp: int = 1) -> float:
+    """Pipeline fill/drain overhead relative to the ideal ``m·V`` chunk
+    ticks: ``(P - 1) / (m · V)``.  ``vpp = 1`` recovers the classic
+    ``(P - 1) / m`` of GPipe / 1F1B-flush; interleaving V virtual chunks
+    per device shrinks the bubble by ``V×``."""
+    return (n_stages - 1) / float(n_micro * vpp)
+
+
+def pipeline_iter_time(stage_times: Sequence[float],
+                       stage_times_nosync: Sequence[float],
+                       n_micro: int, vpp: int = 1) -> float:
+    """Eq. 9 generalized over virtual-chunk degree ``V = vpp``.
+
+    ``V = 1``: ``(m-1) · max(C_nosync) + Σ C_sync`` — the slowest stage
+    paces the ``m-1`` steady-state micro-batches and the last micro-batch
+    drains through every stage.
+
+    ``V > 1``: the drain traverses ``P·V`` *chunks* of ``1/V`` a stage's
+    work each, so the non-critical stages' drain contribution divides by
+    ``V`` (the critical stage still runs its full per-micro-batch work):
+    ``(m-1) · max(C_nosync) + max(C_sync) + (Σ C_sync - max(C_sync)) / V``.
+    For homogeneous stages of cost ``t`` this is ``m·t + (P-1)·t/V`` —
+    exactly the ``(P-1)/(m·V)`` bubble of :func:`bubble_fraction`.
+    """
+    mx = max(stage_times)
+    return ((n_micro - 1) * max(stage_times_nosync)
+            + mx + (sum(stage_times) - mx) / float(vpp))
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerCosts:
     time: float           # seconds, fwd+bwd incl. grad sync (last micro-batch)
@@ -125,7 +159,8 @@ class CostModel:
     # main entry
     # ------------------------------------------------------------------
     def layer_costs(self, spec: LayerSpec, strat: Strategy,
-                    micro_batch_size: float, *, inflight: int = 1) -> LayerCosts:
+                    micro_batch_size: float, *,
+                    inflight: float = 1) -> LayerCosts:
         cfg = self.cfg
         dev = self.cluster.device
         dp, sdp, tp = strat.dp, strat.sdp, strat.tp
@@ -219,7 +254,7 @@ class CostModel:
     def layer_cost_tables(self, specs: Sequence[LayerSpec],
                           strategies: Sequence[Strategy],
                           micro_batch_size: float, *,
-                          inflight: int = 1) -> CostTables:
+                          inflight: float = 1) -> CostTables:
         """Vectorized equivalent of ``layer_costs`` + ``reshard_cost`` over
         every (layer, strategy) pair.
 

@@ -91,7 +91,7 @@ def dp_search_stage(
     micro_batch_size: float,
     budget_bytes: float,
     *,
-    inflight: int = 1,
+    inflight: float = 1,
     n_bins: int = 256,
     n_micro: int = 1,
     tables: Optional[CostTables] = None,
@@ -276,7 +276,7 @@ def dp_search_stage_reference(
     micro_batch_size: float,
     budget_bytes: float,
     *,
-    inflight: int = 1,
+    inflight: float = 1,
     n_bins: int = 256,
     n_micro: int = 1,
 ) -> StageSearchResult:

@@ -20,7 +20,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .cost_model import CostModel, CostModelConfig, CostTables
+from .cost_model import (CostModel, CostModelConfig, CostTables,
+                         pipeline_iter_time)
 from .decision_tree import SearchSpace, construct_search_space
 from .dp_search import StageSearchResult, dp_search_stage
 from .hardware import ClusterSpec
@@ -42,7 +43,12 @@ class OptimizerConfig:
     allow_ckpt: bool = True
     use_pp: bool = True                        # False => PP degree fixed to 1
     bi_objective: bool = True                  # BMW partition refinement
-    schedule: str = "1f1b"                     # or "gpipe"
+    schedule: str = "1f1b"                     # or "gpipe" / "1f1b-interleaved"
+    # pipeline-schedule search axis: candidate schedule names swept per
+    # (B, P); None => just (schedule,), the pre-schedule-subsystem behaviour
+    schedules: Optional[Sequence[str]] = None
+    # virtual-chunk degrees V tried for "1f1b-interleaved" candidates
+    vpp_candidates: Sequence[int] = (2, 4)
     max_pp: Optional[int] = None
     max_tp: Optional[int] = None
     # batch-size exploration grid (Alg. 1 line 2 increments B; we use a
@@ -93,11 +99,16 @@ class GalvatronOptimizer:
             "table_hits": 0,
             "search_seconds": 0.0,
         }
-        # memo caches (tentpole): stage-search results keyed on
-        # (layer-range, B_m, inflight, n_micro, strategy-set id) and
-        # full-model cost tables keyed on (strategy-set id, B_m, inflight).
-        # budget / n_bins / schedule are fixed per optimizer instance, so
-        # they are deliberately not part of the keys.
+        # memo caches: stage-search results keyed on (layer-range, B_m,
+        # inflight, n_micro, strategy-set id) and full-model cost tables
+        # keyed on (strategy-set id, B_m, inflight).  budget / n_bins are
+        # fixed per optimizer instance, so they are deliberately not part
+        # of the keys; the schedule/vpp axis enters stage costs only via
+        # ``inflight``, which IS in the key — so the schedule sweep shares
+        # entries wherever in-flight counts coincide (e.g. m <= P - i).
+        # The caches deliberately persist across optimize() calls on one
+        # instance (re-searches after a batch-grid or schedule-axis tweak
+        # are mostly hits); ``clear_cache()`` is the escape hatch.
         self._stage_cache: Dict[Tuple, StageSearchResult] = {}
         self._table_cache: Dict[Tuple, CostTables] = {}
         self._ref_cache: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
@@ -212,21 +223,68 @@ class GalvatronOptimizer:
             strategies = [self.cfg.fixed_strategy]
         return strategies, strategy_set_id(strategies)
 
+    def clear_cache(self) -> None:
+        """Drop every memo cache (stage searches, cost tables, reference
+        costs, seed partitions).  The caches persist across ``optimize()``
+        calls by design; call this when the instance's cost inputs change
+        under it (e.g. mutated ``profiled_times``)."""
+        self._stage_cache.clear()
+        self._table_cache.clear()
+        self._ref_cache.clear()
+        self._part_cache.clear()
+
+    # ------------------------------------------------------------------
+    # pipeline-schedule search axis
+    # ------------------------------------------------------------------
+    def _schedule_candidates(self, P: int, m: int) -> List[Tuple[str, int]]:
+        """(schedule, vpp_degree) candidates swept per (B, P, m).
+
+        ``1f1b-interleaved`` expands over ``cfg.vpp_candidates`` and is
+        dropped where it degenerates (P == 1), cannot be laid out
+        (P·V > L), or has a ragged last micro-batch group (m % P != 0 —
+        the compiled program's bubble then exceeds the analytic
+        ``(P-1)/(m·V)`` term, so the model would oversell it);
+        single-chunk schedules carry V = 1.
+        """
+        names = (tuple(self.cfg.schedules) if self.cfg.schedules
+                 else (self.cfg.schedule,))
+        out: List[Tuple[str, int]] = []
+        for name in names:
+            if name == "1f1b-interleaved":
+                if P <= 1 or m % P:
+                    continue
+                for v in self.cfg.vpp_candidates:
+                    v = int(v)
+                    if v > 1 and P * v <= len(self.specs):
+                        out.append((name, v))
+            else:
+                out.append((name, 1))
+        if not out:     # interleaved-only request on a degenerate (B, P, m)
+            out.append(("1f1b", 1))
+        return out
+
     # ------------------------------------------------------------------
     # per-(B, P, m, partition) evaluation == Galvatron_Search (Alg. 1 l.17)
     # ------------------------------------------------------------------
     def _eval_partition(self, partition: Sequence[int], B: int, m: int,
                         P: int, strategies: Optional[List[Strategy]] = None,
-                        sid: Optional[int] = None,
+                        sid: Optional[int] = None, schedule: Optional[str] = None,
+                        vpp: int = 1,
                         ) -> Tuple[float, PartitionEval, List[Strategy]]:
         B_m = B / m
+        schedule = schedule or self.cfg.schedule
         if strategies is None or sid is None:
             strategies, sid = self._strategies_for(P)
+        if vpp > 1 and min(partition) < vpp:
+            # a stage needs >= V layers to be cut into V virtual chunks
+            ev = PartitionEval(list(partition), [INF] * P, [INF] * P,
+                               [INF] * P, False)
+            return INF, ev, [Strategy(())] * sum(partition)
         bounds = stage_bounds(partition)
         stage_times, stage_ns, stage_mems, all_strats = [], [], [], []
         feasible = True
         for i, (a, b) in enumerate(bounds):
-            infl = inflight_microbatches(i, P, m, self.cfg.schedule)
+            infl = inflight_microbatches(i, P, m, schedule, vpp)
             res = self._stage_search(a, b, strategies, sid, B_m, infl, m)
             if not res.feasible:
                 feasible = False
@@ -238,7 +296,9 @@ class GalvatronOptimizer:
             p2p = 0.0
             if P > 1 and b < len(self.specs):
                 dd = res.strategies[-1].data_degree if res.strategies else 1
-                p2p = self.cost.p2p_cost(self.specs[b - 1], B_m, dd)
+                # interleaved: each micro-batch crosses every device
+                # boundary V times (once per virtual chunk)
+                p2p = vpp * self.cost.p2p_cost(self.specs[b - 1], B_m, dd)
             stage_times.append(res.time + p2p)
             stage_ns.append(res.time_nosync + p2p)
             stage_mems.append(res.e_all)
@@ -247,8 +307,9 @@ class GalvatronOptimizer:
                            stage_mems, feasible)
         if not feasible:
             return INF, ev, all_strats
-        # Eq. 9: (m-1) * slowest no-sync stage + sum of sync stage times
-        iter_time = (m - 1) * max(stage_ns) + sum(stage_times)
+        # Eq. 9 (generalized over V): steady state paced by the slowest
+        # no-sync stage; the drain's bubble term shrinks by 1/V
+        iter_time = pipeline_iter_time(stage_times, stage_ns, m, vpp)
         return iter_time, ev, all_strats
 
     # ------------------------------------------------------------------
@@ -265,34 +326,36 @@ class GalvatronOptimizer:
 
     # ------------------------------------------------------------------
     def _search_pp(self, B: int, P: int) -> Optional[ParallelPlan]:
-        """Best plan for one (batch, PP degree): Alg. 1 inner body, plus the
-        Alg. 2 partition-adjustment queue when bi_objective is on."""
+        """Best plan for one (batch, PP degree): Alg. 1 inner body crossed
+        with the schedule × vpp axis, plus the Alg. 2 partition-adjustment
+        queue when bi_objective is on."""
         L = len(self.specs)
         if P > L:
             return None
         best: Optional[ParallelPlan] = None
         strategies, sid = self._strategies_for(P)
         for m in self._micro_candidates(B, P):
+          for sched, vpp in self._schedule_candidates(P, m):
             B_m = B / m
             group = self.cluster.n_devices // P
             if P == 1:
                 partitions = [[L]]
                 pt_max_mem = INF
             else:
-                pkey = (B_m, group, P, m)
+                pkey = (B_m, group, P, m, sched, vpp)
                 seeds = None if self._seed_mode else self._part_cache.get(pkey)
                 if seeds is None:
                     t_ref, m_ref = self._reference_layer_costs(B_m, group)
                     seeds = (
-                        memory_balanced_partition(m_ref, P, m,
-                                                  self.cfg.schedule),
+                        memory_balanced_partition(m_ref, P, m, sched, vpp),
                         time_balanced_partition(t_ref, P),
                     )
                     self._part_cache[pkey] = seeds
                 p_m, p_t = seeds
                 # pt_max_mem: criterion (3) reference — max stage memory
                 # under the time-balanced partition
-                _, ev_t, _ = self._eval_partition(p_t, B, m, P, strategies, sid)
+                _, ev_t, _ = self._eval_partition(p_t, B, m, P, strategies,
+                                                  sid, sched, vpp)
                 pt_max_mem = max(ev_t.stage_mems) if ev_t.feasible else INF
                 # Alg. 2 seeds the queue with p_m and adjusts toward p_t;
                 # p_t itself is also evaluated (the optimum lies between the
@@ -305,7 +368,8 @@ class GalvatronOptimizer:
                 part = queue.pop(0)
                 iters += 1
                 t, ev, strats = self._eval_partition(part, B, m, P,
-                                                     strategies, sid)
+                                                     strategies, sid,
+                                                     sched, vpp)
                 if ev.feasible and t < INF:
                     if best is None or B / t > best.est_throughput:
                         a_t, a_m = balance_degrees(ev.stage_times, ev.stage_mems)
@@ -313,7 +377,7 @@ class GalvatronOptimizer:
                             n_devices=self.cluster.n_devices,
                             pp_degree=P, partition=list(part),
                             strategies=strats, global_batch=B, n_micro=m,
-                            schedule=self.cfg.schedule,
+                            schedule=sched, vpp_degree=vpp,
                             est_iter_time=t, est_throughput=B / t,
                             est_stage_mem=ev.stage_mems,
                             alpha_t=a_t, alpha_m=a_m)
@@ -323,7 +387,8 @@ class GalvatronOptimizer:
                             if key in seen:
                                 continue
                             t2, ev2, _ = self._eval_partition(cand, B, m, P,
-                                                              strategies, sid)
+                                                              strategies, sid,
+                                                              sched, vpp)
                             if validate_adjustment(
                                     ev2, max(ev.stage_times),
                                     self.cluster.budget(), pt_max_mem):
@@ -333,7 +398,12 @@ class GalvatronOptimizer:
 
     # ------------------------------------------------------------------
     def optimize(self, verbose: bool = False) -> Optional[ParallelPlan]:
-        """Alg. 1 / Alg. 2 top level: sweep batch sizes, keep best Tpt."""
+        """Alg. 1 / Alg. 2 top level: sweep batch sizes, keep best Tpt.
+
+        Repeated calls on one instance reuse the memo caches (hit/miss
+        telemetry keeps accumulating in ``self.stats`` and is snapshotted
+        into the returned plan's ``search_stats``); ``clear_cache()``
+        resets them."""
         t0 = _time.time()
         grid = list(self.cfg.batch_grid or default_batch_grid(self.cfg.max_batch))
         best: Optional[ParallelPlan] = None

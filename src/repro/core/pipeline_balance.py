@@ -20,10 +20,27 @@ INF = float("inf")
 
 
 def inflight_microbatches(stage: int, n_stages: int, n_micro: int,
-                          schedule: str = "1f1b") -> int:
-    """Number of in-flight micro-batch activation sets on one stage."""
+                          schedule: str = "1f1b", vpp: int = 1) -> float:
+    """In-flight micro-batch activation sets on one stage, in units of the
+    stage's *full* forward activation footprint (the cost model multiplies
+    a stage's per-micro-batch activation bytes by this).
+
+    * ``gpipe``: every micro-batch is stashed — ``m``.
+    * ``1f1b`` (flush): stage ``i`` (0-indexed) warms up ``P - i``
+      micro-batches before its first backward.
+    * ``1f1b-interleaved`` with ``V = vpp`` chunks: the depth-first
+      Megatron schedule warms up ``2·(P-1-i) + (V-1)·P`` forward *chunks*
+      on device ``i``, plus one in steady state, capped at the ``m·V``
+      chunks that exist.  Each chunk's activations are ``1/V`` of the
+      stage's, so the per-chunk count divides by ``V`` — fractional
+      full-stage units (the per-chunk accounting of DESIGN.md §5).
+    """
     if schedule == "gpipe":
         return n_micro
+    if schedule == "1f1b-interleaved" and vpp > 1:
+        chunks = min(2 * (n_stages - stage - 1) + (vpp - 1) * n_stages + 1,
+                     n_micro * vpp)
+        return chunks / vpp
     # 1F1B-flush: stage i (0-indexed) warms up P - i micro-batches
     return min(n_stages - stage, n_micro)
 
@@ -87,11 +104,13 @@ def time_balanced_partition(layer_times: Sequence[float], P: int) -> List[int]:
 
 
 def memory_balanced_partition(layer_mems: Sequence[float], P: int,
-                              n_micro: int, schedule: str = "1f1b") -> List[int]:
+                              n_micro: int, schedule: str = "1f1b",
+                              vpp: int = 1) -> List[int]:
     """Balance act-memory × 1F1B in-flight weight across stages."""
     return _partition_minimize_max(
         np.asarray(layer_mems, float), P,
-        stage_weight=lambda i: inflight_microbatches(i, P, n_micro, schedule))
+        stage_weight=lambda i: inflight_microbatches(i, P, n_micro, schedule,
+                                                     vpp))
 
 
 def adjust_partition(partition: Sequence[int],

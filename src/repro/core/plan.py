@@ -20,6 +20,8 @@ class ParallelPlan:
     global_batch: int
     n_micro: int
     schedule: str = "1f1b"
+    vpp_degree: int = 1                  # virtual chunks per stage (V);
+                                         # > 1 only with "1f1b-interleaved"
 
     # estimator outputs (filled by the search)
     est_iter_time: float = 0.0
@@ -34,9 +36,22 @@ class ParallelPlan:
     search_stats: Optional[Dict[str, float]] = dataclasses.field(
         default=None, compare=False)
 
+    def __post_init__(self):
+        if self.n_micro < 1:
+            raise ValueError(f"n_micro must be >= 1, got {self.n_micro}")
+        if self.global_batch % self.n_micro:
+            raise ValueError(
+                f"global_batch={self.global_batch} is not divisible by "
+                f"n_micro={self.n_micro}: micro-batches would be uneven "
+                "(pick n_micro dividing the global batch)")
+        if self.vpp_degree < 1:
+            raise ValueError(
+                f"vpp_degree must be >= 1, got {self.vpp_degree}")
+
     @property
     def micro_batch_size(self) -> int:
-        return max(1, self.global_batch // self.n_micro)
+        # exact by the __post_init__ divisibility check
+        return self.global_batch // self.n_micro
 
     def stage_strategies(self, stage: int) -> List[Strategy]:
         start = sum(self.partition[:stage])
@@ -53,8 +68,10 @@ class ParallelPlan:
             if prev is not None:
                 segs.append(f"{prev} x{run}")
             prev, run = name, 1
+        sched = (f"{self.schedule}" if self.vpp_degree == 1
+                 else f"{self.schedule}(V={self.vpp_degree})")
         return (f"pp{self.pp_degree} p={self.partition} B={self.global_batch} "
-                f"m={self.n_micro} | " + ", ".join(segs))
+                f"m={self.n_micro} {sched} | " + ", ".join(segs))
 
     # ---- (de)serialization ----------------------------------------------
     def to_json(self) -> Dict:
@@ -66,6 +83,7 @@ class ParallelPlan:
             "global_batch": self.global_batch,
             "n_micro": self.n_micro,
             "schedule": self.schedule,
+            "vpp_degree": self.vpp_degree,
             "est_iter_time": self.est_iter_time,
             "est_throughput": self.est_throughput,
             "est_stage_mem": self.est_stage_mem,
@@ -88,6 +106,8 @@ class ParallelPlan:
             global_batch=d["global_batch"],
             n_micro=d["n_micro"],
             schedule=d.get("schedule", "1f1b"),
+            # PR-1-era plan JSON predates interleaved schedules
+            vpp_degree=d.get("vpp_degree", 1),
             est_iter_time=d.get("est_iter_time", 0.0),
             est_throughput=d.get("est_throughput", 0.0),
             est_stage_mem=d.get("est_stage_mem"),

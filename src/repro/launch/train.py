@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import math
 import pathlib
 import time
 
@@ -35,10 +36,72 @@ def search_plan(cfg, seq_len: int, n_devices: int = 64) -> ParallelPlan:
     ocfg.n_bins = 96
     ocfg.micro_candidates = 2
     ocfg.max_pp = 4
+    # the schedule is a searched dimension (DESIGN.md §5): plain 1F1B vs
+    # interleaved virtual stages, trading bubble for hand-off traffic
+    ocfg.schedules = ("1f1b", "1f1b-interleaved")
+    ocfg.vpp_candidates = (2,)
     plan = GalvatronOptimizer(specs, tpu_v5e_pod(n_devices), ocfg).optimize()
     if plan is None:
         raise RuntimeError("no feasible plan")
     return plan
+
+
+def run_pipeline(cfg, plan: ParallelPlan, args, gen) -> None:
+    """Execute the plan's searched pipeline schedule via the shard_map
+    runtime, scaled down to whatever pipe degree the local devices and the
+    (possibly reduced) layer count support."""
+    from repro.launch.mesh import make_pipeline_mesh
+    from repro.models import init_lm
+    from repro.optim import adamw_init, adamw_update
+    from repro.runtime import make_pipeline_loss, stage_split_params
+
+    n_dev = len(jax.devices())
+    P = 1
+    for cand in range(min(n_dev, plan.pp_degree, cfg.n_layers), 0, -1):
+        if n_dev % cand == 0 and cfg.n_layers % cand == 0:
+            P = cand
+            break
+    sched, V = plan.schedule, plan.vpp_degree
+    while V > 1 and cfg.n_layers % (P * V):
+        V -= 1
+    if V == 1 and sched == "1f1b-interleaved":
+        sched = "1f1b"          # interleaving degenerated away locally
+    m = math.gcd(plan.n_micro, args.batch)
+    # the data axis shards the per-micro batch; shrink it (idling spare
+    # devices) rather than hand shard_map a non-divisible batch dim
+    n_data = math.gcd(n_dev // P, args.batch // m)
+    mesh = make_pipeline_mesh(P, n_data)
+    print(f"pipeline runtime: schedule={sched} P={P} V={V} m={m} "
+          f"(plan asked {plan.schedule} P={plan.pp_degree} "
+          f"V={plan.vpp_degree} m={plan.n_micro})")
+    ocfg = AdamWConfig(lr=args.lr)
+    with mesh:
+        loss_fn = make_pipeline_loss(cfg, mesh, m, schedule=sched,
+                                     n_chunks=V)
+        params = init_lm(jax.random.PRNGKey(0), cfg)
+        ps = stage_split_params(params, P, V)
+        opt = adamw_init(ps, ocfg)
+
+        @jax.jit
+        def step(ps, opt, batch):
+            loss, grads = loss_fn(ps, batch)
+            ps, opt, metrics = adamw_update(ps, grads, opt, ocfg)
+            metrics["loss"] = loss
+            return ps, opt, metrics
+
+        t0 = time.time()
+        tokens_seen = 0
+        for i in range(1, args.steps + 1):
+            b = next(gen)
+            batch = {k: jnp.asarray(v).reshape(m, args.batch // m, args.seq)
+                     for k, v in b.items()}
+            ps, opt, metrics = step(ps, opt, batch)
+            tokens_seen += args.batch * args.seq
+            if i % args.log_every == 0 or i == args.steps:
+                dt = time.time() - t0
+                print(f"step {i:5d}  loss={float(metrics['loss']):.4f}  "
+                      f"tok/s={tokens_seen/dt:,.0f}")
+    print("done.")
 
 
 def main(argv=None) -> None:
@@ -56,6 +119,10 @@ def main(argv=None) -> None:
     ap.add_argument("--ckpt-every", type=int, default=100)
     ap.add_argument("--plan-out", default=None)
     ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--pipeline", action="store_true",
+                    help="execute the searched pipeline schedule via the "
+                         "shard_map runtime (pipe mesh over local devices) "
+                         "instead of the GSPMD executor path")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -66,17 +133,14 @@ def main(argv=None) -> None:
         cfg = cfg.with_(n_layers=args.layers or cfg.n_layers,
                         d_model=args.d_model or cfg.d_model)
 
-    # 1) the paper's engine searches the plan (for the target pod)
+    # 1) the paper's engine searches the plan (for the target pod),
+    #    including the pipeline-schedule dimension
     plan = search_plan(cfg, args.seq)
     print("searched plan:", plan.summary())
+    print(f"schedule: {plan.schedule} vpp={plan.vpp_degree} "
+          f"m={plan.n_micro}")
     if args.plan_out:
         pathlib.Path(args.plan_out).write_text(plan.dumps())
-
-    # 2) map the plan onto the local mesh
-    policy = ShardPolicy.from_strategy(
-        plan.strategies[len(plan.strategies) // 2],
-        remat_segments=[s.ckpt for s in plan.strategies[:1]])
-    mesh = make_local_mesh()
 
     dcfg = DataConfig(seq_len=args.seq, global_batch=args.batch,
                       vocab_size=cfg.vocab_size,
@@ -85,6 +149,17 @@ def main(argv=None) -> None:
                       encoder_seq=cfg.encoder_seq, d_model=cfg.d_model)
     gen = (text_corpus_batches(args.corpus, dcfg) if args.corpus
            else synthetic_lm_batches(dcfg))
+
+    # 2a) pipeline mode: execute the searched schedule itself
+    if args.pipeline:
+        run_pipeline(cfg, plan, args, gen)
+        return
+
+    # 2b) map the plan onto the local mesh (GSPMD executor path)
+    policy = ShardPolicy.from_strategy(
+        plan.strategies[len(plan.strategies) // 2],
+        remat_segments=[s.ckpt for s in plan.strategies[:1]])
+    mesh = make_local_mesh()
 
     with mesh:
         step = make_train_step(cfg, mesh, policy, batch_specs(dcfg),

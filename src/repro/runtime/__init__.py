@@ -1,11 +1,16 @@
 from .executor import (BuiltStep, abstract_decode_state, abstract_opt_state,
                        abstract_params, init_train_state, make_prefill_step,
                        make_serve_step, make_train_step)
+from .pipeline import (make_pipeline_loss, make_pipeline_loss_from_program,
+                       stage_split_params)
+from .schedules import SCHEDULE_NAMES, ScheduleProgram, compile_schedule
 from .sharding import (ShardPolicy, batch_shardings, decode_state_shardings,
                        opt_shardings, param_shardings)
 
-__all__ = ["BuiltStep", "ShardPolicy", "abstract_decode_state",
-           "abstract_opt_state", "abstract_params", "batch_shardings",
-           "decode_state_shardings", "init_train_state", "make_prefill_step",
+__all__ = ["BuiltStep", "SCHEDULE_NAMES", "ScheduleProgram", "ShardPolicy",
+           "abstract_decode_state", "abstract_opt_state", "abstract_params",
+           "batch_shardings", "compile_schedule", "decode_state_shardings",
+           "init_train_state", "make_pipeline_loss",
+           "make_pipeline_loss_from_program", "make_prefill_step",
            "make_serve_step", "make_train_step", "opt_shardings",
-           "param_shardings"]
+           "param_shardings", "stage_split_params"]

@@ -1,21 +1,37 @@
-"""Pipeline-parallel runtime: GPipe-style micro-batch pipelining as a
-``shard_map`` over a ``pipe`` mesh axis with ``lax.ppermute`` stage
-hand-off, composable with data parallelism on a ``data`` axis.
+"""Pipeline-parallel runtime: micro-batch pipelining as a ``shard_map``
+over a ``pipe`` mesh axis with ``lax.ppermute`` stage hand-off, composable
+with data parallelism on a ``data`` axis.
 
 Takeaway #1 maps this axis onto the slowest interconnect — across pods in
-the production mesh.  Differentiating straight through the pipelined scan
-gives GPipe semantics (all in-flight activations stashed); the cost model
-accounts 1F1B separately (§IV-B).
+the production mesh.
 
+The *schedule* is pluggable (DESIGN.md §5): ``runtime/schedules.py``
+compiles a named schedule (``gpipe`` / ``1f1b`` / ``1f1b-interleaved``)
+into per-tick program tables — (micro-batch, virtual chunk, validity,
+loss) per (tick, stage) — and this module executes whatever program it is
+handed with one generic ``lax.scan`` tick loop.  Params are split into
+``P × V`` virtual chunks (``stage_split_params``); the interleaved
+schedule walks each device through its ``V`` chunks per micro-batch group.
+
+Hand-off / compute overlap: each tick *first* issues the ring ``ppermute``
+on the previous tick's output, *then* runs the stage body — the two have
+no data dependency, so XLA schedules the send/recv concurrently with the
+compute (the permute of tick ``t`` rides under the compute of tick
+``t+1``'s body in the unrolled trace).
+
+Differentiating straight through the pipelined scan gives GPipe autodiff
+semantics; the ``1f1b`` family rematerializes the tick body so only the
+boundary carries are stashed (the 1F1B-flush memory profile — the cost
+model accounts the schedules' time/memory split analytically, Eq. 5/9).
 The stage computation runs *locally* per device (pure jnp inside
 shard_map), so this runtime composes PP x DP; TP/SDP within a stage are
 served by the GSPMD executor path.  Heterogeneous multi-stack models
-(zamba2 / whisper) use the executor path only — see DESIGN.md.
+(zamba2 / whisper) use the executor path only — see DESIGN.md §3.
 """
 from __future__ import annotations
 
 import functools
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +41,7 @@ from repro.models.common import ModelConfig
 from repro.models.embedding import embed
 from repro.models.layers import cross_entropy_loss, rms_norm
 from repro.models.transformer import _BLOCK_APPLY, build_stacks
+from repro.runtime.schedules import ScheduleProgram, compile_schedule
 
 try:  # JAX >= 0.6
     from jax import shard_map as _shard_map
@@ -40,16 +57,26 @@ except (ImportError, TypeError):  # pragma: no cover
                               out_specs=out_specs, check_rep=False)
 
 
-def stage_split_params(params, n_stages: int):
-    """Reshape every stacked (L, ...) leaf to (P, L/P, ...): dim0 shards
-    over the pipe axis so each device holds exactly its stage's layers."""
+def stage_split_params(params, n_stages: int, n_chunks: int = 1):
+    """Reshape every stacked (L, ...) leaf to (P, V, L/(P·V), ...).
+
+    dim0 shards over the pipe axis so each device holds exactly its V
+    virtual chunks.  Chunk ``v`` on device ``i`` carries the layers of
+    global virtual stage ``v·P + i`` (the interleaved round-robin layer
+    placement); with V = 1 this is the plain contiguous stage split.
+    """
     stacks = params["stacks"]
     assert len(stacks) == 1, "pipeline runtime requires one homogeneous stack"
+    PV = n_stages * n_chunks
 
     def resh(v):
         L = v.shape[0]
-        assert L % n_stages == 0, f"{L} layers not divisible by {n_stages} stages"
-        return v.reshape(n_stages, L // n_stages, *v.shape[1:])
+        assert L % PV == 0, (f"{L} layers not divisible by "
+                             f"{n_stages} stages x {n_chunks} chunks")
+        # (L, ...) -> (V, P, Lc, ...) [virtual stage s = v*P + i -> (v, i)]
+        # -> (P, V, Lc, ...) so dim0 is the device (pipe) dim
+        out = v.reshape(n_chunks, n_stages, L // PV, *v.shape[1:])
+        return out.swapaxes(0, 1)
 
     out = dict(params)
     out["stacks"] = [jax.tree.map(resh, stacks[0])]
@@ -67,63 +94,91 @@ def pipeline_specs(params_split, mesh: Mesh):
 
 
 def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, n_micro: int,
-                       schedule: str = "gpipe"):
-    """Returns loss(params_split, batch) running the pipelined schedule.
+                       schedule: str = "gpipe",
+                       n_chunks: Optional[int] = None):
+    """Returns loss(params_split, batch) running the compiled schedule.
 
     batch: tokens/labels (m, B_m, S) — micro dim leading, batch dim sharded
-    over 'data', replicated over 'pipe'.
+    over 'data', replicated over 'pipe'.  ``params_split`` must come from
+    ``stage_split_params(params, P, V)`` with the matching (P, V).
 
-    ``schedule="gpipe"`` stashes every tick's activations (GPipe memory);
-    ``schedule="1f1b"`` rematerializes the tick body, so only the per-tick
-    boundary carries are stashed — the 1F1B-flush *memory* profile (stash
-    ∝ boundary × ticks instead of full layer activations × ticks).  The
-    compute result is identical either way; the cost model accounts the
-    schedules' time/memory difference analytically (Eq. 5/9).
+    The schedule name selects a :class:`ScheduleProgram` (see
+    ``runtime/schedules.py``); the tick loop below is schedule-agnostic —
+    it just replays the program tables.
     """
     n_stages = mesh.shape["pipe"]
+    prog = compile_schedule(schedule, n_stages, n_micro, n_chunks)
+    return make_pipeline_loss_from_program(cfg, mesh, prog)
+
+
+def make_pipeline_loss_from_program(cfg: ModelConfig, mesh: Mesh,
+                                    prog: ScheduleProgram):
+    """Generic tick-loop executor for any compiled :class:`ScheduleProgram`."""
+    n_stages = mesh.shape["pipe"]
+    assert prog.n_stages == n_stages, (prog.n_stages, n_stages)
+    m, V, T = prog.n_micro, prog.n_chunks, prog.n_ticks
     (kind, _), = build_stacks(cfg)
     block = _BLOCK_APPLY[kind]
 
-    def stage_fn(stack_params, x, positions):
+    def stage_fn(chunk_params, x, positions):
         def body(carry, lp):
             h, _ = block(lp, carry, positions, cfg, window=cfg.sliding_window)
             return h, None
-        x, _ = jax.lax.scan(body, x, stack_params)
+        x, _ = jax.lax.scan(body, x, chunk_params)
         return x
 
     def local_step(params, tokens, labels):
         # tokens/labels: (m, B_loc, S) local shards
         stage = jax.lax.axis_index("pipe")
-        m, B, S = tokens.shape
+        _, B, S = tokens.shape
         positions = jnp.broadcast_to(jnp.arange(S), (B, S))
-        stack = jax.tree.map(lambda v: v[0], params["stacks"][0])  # (Lp, ...)
+        stack = jax.tree.map(lambda v: v[0], params["stacks"][0])  # (V, Lc, ...)
         d = cfg.d_model
-        T = m + n_stages - 1
-        perm = [(i, i + 1) for i in range(n_stages - 1)]
+        # i -> i+1 carries the same-chunk hand-off; the P-1 -> 0 wrap link
+        # carries the chunk v -> v+1 hand-off and is only needed when V > 1
+        # (with V = 1 stage 0 always starts from the embedding, so a full
+        # ring would ship the last stage's output back just to discard it)
+        if V > 1:
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+        else:
+            perm = [(i, i + 1) for i in range(n_stages - 1)]
+        mb_tab = jnp.asarray(prog.mb_index)        # (T, P)
+        ch_tab = jnp.asarray(prog.chunk_index)     # (T, P)
+        loss_tab = jnp.asarray(prog.loss_valid)    # (T, P)
 
         def tick(carry, t):
             y_prev, acc = carry
+            # hand-off overlap: issue the permute on the PREVIOUS tick's
+            # output before this tick's stage body — no data dependency, so
+            # the collective runs under the compute
             x_recv = jax.lax.ppermute(y_prev, "pipe", perm)
-            mb_idx = jnp.clip(t, 0, m - 1)
+            mb_idx = mb_tab[t, stage]
+            chunk = ch_tab[t, stage]
             mb = jax.lax.dynamic_index_in_dim(tokens, mb_idx, 0, False)
             x_emb = embed(params["embed"], mb).astype(cfg.dtype)
-            x_in = jnp.where(stage == 0, x_emb, x_recv)
-            y = stage_fn(stack, x_in, positions)
-            # final stage: head + loss for micro-batch t - (P-1)
-            lb_idx = jnp.clip(t - (n_stages - 1), 0, m - 1)
-            lb = jax.lax.dynamic_index_in_dim(labels, lb_idx, 0, False)
+            # virtual stage 0 (device 0, chunk 0) starts from the embedding;
+            # everyone else consumes the ring hand-off
+            first = (stage == 0) & (chunk == 0)
+            x_in = jnp.where(first, x_emb, x_recv)
+            chunk_stack = jax.tree.map(
+                lambda v: jax.lax.dynamic_index_in_dim(v, chunk, 0, False),
+                stack)
+            y = stage_fn(chunk_stack, x_in, positions)
+            # last virtual stage: head + loss for the just-finished mb;
+            # bubble slots compute too but their loss is masked out (their
+            # outputs are never consumed — every valid slot's producer one
+            # tick earlier is itself valid)
+            lb = jax.lax.dynamic_index_in_dim(labels, mb_idx, 0, False)
             h = rms_norm(y, params["final_norm"], cfg.norm_eps)
             logits = h @ (params["head"] if "head" in params
                           else params["embed"].T)
             loss_t = cross_entropy_loss(logits, lb)
-            is_last = stage == n_stages - 1
-            valid = (t >= n_stages - 1) & is_last
-            acc = acc + jnp.where(valid, loss_t, 0.0)
+            acc = acc + jnp.where(loss_tab[t, stage], loss_t, 0.0)
             return (y, acc), None
 
         y0 = jnp.zeros((B, S, d), cfg.dtype)
         tick_fn = (jax.checkpoint(tick, prevent_cse=False)
-                   if schedule == "1f1b" else tick)
+                   if prog.remat else tick)
         (_, acc), _ = jax.lax.scan(tick_fn, (y0, jnp.zeros((), jnp.float32)),
                                    jnp.arange(T))
         # NOTE: no collective here — the loss lives on the last stage only.

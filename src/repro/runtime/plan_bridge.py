@@ -20,6 +20,7 @@ from repro.core.plan import ParallelPlan
 from repro.models.common import ModelConfig
 from repro.models.transformer import build_stacks
 from repro.roofline.analysis import modeled_memory
+from repro.runtime.schedules import ScheduleProgram, compile_schedule
 from repro.runtime.sharding import ShardPolicy
 
 
@@ -58,3 +59,20 @@ def policy_from_plan(cfg: ModelConfig, plan: ParallelPlan, *,
         seq_shard = not mm.fits      # §Perf rule: only when stash overflows
     return ShardPolicy(tp=tp, zero=zero, remat_segments=tuple(remat),
                        seq_shard=seq_shard)
+
+
+def schedule_program_from_plan(plan: ParallelPlan) -> ScheduleProgram:
+    """Compile the plan's searched (schedule, pp_degree, n_micro,
+    vpp_degree) into the tick program the pipeline runtime executes."""
+    return compile_schedule(plan.schedule, plan.pp_degree, plan.n_micro,
+                            plan.vpp_degree)
+
+
+def pipeline_loss_from_plan(cfg: ModelConfig, mesh, plan: ParallelPlan):
+    """shard_map pipeline loss executing the plan's searched schedule.
+
+    The mesh's ``pipe`` axis size must equal ``plan.pp_degree`` (the
+    program tables are compiled for exactly that stage count)."""
+    from repro.runtime.pipeline import make_pipeline_loss_from_program
+    prog = schedule_program_from_plan(plan)
+    return make_pipeline_loss_from_program(cfg, mesh, prog)

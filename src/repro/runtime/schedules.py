@@ -1,0 +1,130 @@
+"""Pipeline-schedule subsystem (DESIGN.md §5).
+
+A *schedule* is compiled ahead of time into a per-tick **program table**:
+for every tick ``t`` and pipeline stage ``i`` the table says which
+micro-batch to process, which local virtual chunk of layers to run, whether
+the slot is real work or a bubble, and whether the tick finishes the last
+virtual stage (head + loss).  The runtime (``runtime/pipeline.py``) then
+executes *one* generic ``lax.scan`` tick loop for every schedule — the
+schedules differ only in data, not in code.
+
+Supported schedules:
+
+  * ``gpipe``             — all ``m`` micro-batches stream through ``P``
+    stages; every tick's activations are stashed (GPipe memory, Eq. 5).
+  * ``1f1b``              — same tick order (a flush schedule's forward
+    order is GPipe's), but the tick body is rematerialized so only the
+    per-tick boundary carries are stashed — the 1F1B-flush *memory*
+    profile (``P - i`` in-flight sets on stage ``i``, Eq. 9).
+  * ``1f1b-interleaved``  — each device owns ``V`` *virtual chunks*;
+    global virtual stage ``s = v·P + i`` lives on device ``i`` as chunk
+    ``v``.  Micro-batches advance in groups of ``P``, shrinking the
+    pipeline bubble from ``(P-1)/m`` to ``(P-1)/(m·V)`` at the price of
+    ``V×`` hand-off traffic and deeper warm-up queues.
+
+Tick mapping (one formula covers all three; ``V = 1`` recovers GPipe/1F1B):
+virtual stage ``s = v·P + i`` processes micro-batch ``mb = g·P + r``
+(group ``g = mb // P``, offset ``r = mb % P``) at tick
+
+    t = i + r + P·(g·V + v)
+
+Consecutive virtual stages always sit one ring hop and one tick apart —
+``s → s+1`` is either device ``i → i+1`` (same chunk) or the wrap link
+``P-1 → 0`` (chunk ``v → v+1``) — so a single ``ppermute`` over the full
+ring moves every in-flight activation between ticks.  Inverting the
+mapping per (tick, device): ``k = t - i``, ``r = k mod P``,
+``v = (k div P) mod V``, ``g = k div (P·V)`` — unique, so a device never
+has two chunks scheduled on the same tick.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+SCHEDULE_NAMES: Tuple[str, ...] = ("gpipe", "1f1b", "1f1b-interleaved")
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleProgram:
+    """A compiled schedule: per-tick program tables, all shaped (T, P)."""
+
+    name: str
+    n_stages: int            # P — pipeline stages (devices on the pipe axis)
+    n_chunks: int            # V — virtual chunks per stage (1 unless interleaved)
+    n_micro: int             # m — micro-batches per iteration
+    n_ticks: int             # T — scan length
+    remat: bool              # rematerialize the tick body (1F1B memory profile)
+    mb_index: np.ndarray     # (T, P) int32, clipped to [0, m) — micro-batch
+    chunk_index: np.ndarray  # (T, P) int32 in [0, V) — local virtual chunk
+    valid: np.ndarray        # (T, P) bool — real work (False = bubble slot)
+    loss_valid: np.ndarray   # (T, P) bool — tick finishes virtual stage P·V-1
+
+    @property
+    def bubble_ticks(self) -> int:
+        """Fill+drain ticks beyond the ideal ``m·V``.
+
+        ``P - 1`` for single-chunk schedules and for interleaved programs
+        with full micro-batch groups (``m % P == 0``).  A ragged last
+        group (``m % P != 0``) leaves extra idle slots, so the optimizer
+        only proposes interleaving when ``m`` divides evenly (the analytic
+        ``(P-1)/(m·V)`` bubble would otherwise understate this program)."""
+        return self.n_ticks - self.n_micro * self.n_chunks
+
+    def __post_init__(self):
+        for f in ("mb_index", "chunk_index", "valid", "loss_valid"):
+            assert getattr(self, f).shape == (self.n_ticks, self.n_stages), f
+
+
+def compile_schedule(name: str, n_stages: int, n_micro: int,
+                     n_chunks: Optional[int] = None) -> ScheduleProgram:
+    """Compile ``name`` into a :class:`ScheduleProgram`.
+
+    ``n_chunks`` (V) is only meaningful for ``1f1b-interleaved`` (default 2
+    there); ``gpipe``/``1f1b`` are single-chunk schedules and reject V > 1.
+    """
+    if name not in SCHEDULE_NAMES:
+        raise ValueError(f"unknown schedule {name!r}; "
+                         f"expected one of {SCHEDULE_NAMES}")
+    if n_stages < 1:
+        raise ValueError(f"n_stages must be >= 1, got {n_stages}")
+    if n_micro < 1:
+        raise ValueError(f"n_micro must be >= 1, got {n_micro}")
+    if name == "1f1b-interleaved":
+        V = 2 if n_chunks is None else int(n_chunks)
+        if V < 2:
+            raise ValueError(
+                f"1f1b-interleaved needs n_chunks >= 2, got {V} "
+                "(V=1 is plain 1f1b)")
+    else:
+        V = 1 if n_chunks is None else int(n_chunks)
+        if V != 1:
+            raise ValueError(f"schedule {name!r} is single-chunk; "
+                             f"got n_chunks={V}")
+
+    P, m = int(n_stages), int(n_micro)
+    # last slot: micro-batch m-1 (g = (m-1)//P, r = (m-1)%P) finishing the
+    # last virtual stage (i = P-1, v = V-1)
+    T = (P - 1) + ((m - 1) % P) + P * (((m - 1) // P) * V + (V - 1)) + 1
+
+    t = np.arange(T, dtype=np.int64)[:, None]          # (T, 1)
+    i = np.arange(P, dtype=np.int64)[None, :]          # (1, P)
+    k = t - i
+    nonneg = k >= 0
+    kc = np.maximum(k, 0)
+    r = kc % P
+    q = kc // P
+    v = q % V
+    g = q // V
+    mb = g * P + r
+    valid = nonneg & (mb < m)
+    loss_valid = valid & (i == P - 1) & (v == V - 1)
+    return ScheduleProgram(
+        name=name, n_stages=P, n_chunks=V, n_micro=m, n_ticks=T,
+        remat=(name != "gpipe"),
+        mb_index=np.clip(mb, 0, m - 1).astype(np.int32),
+        chunk_index=v.astype(np.int32),
+        valid=valid,
+        loss_valid=loss_valid,
+    )

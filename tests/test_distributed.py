@@ -166,6 +166,48 @@ print("OK")
 
 
 @pytest.mark.slow
+def test_pipeline_all_schedules_match_reference_8dev():
+    """Schedule-equivalence: gpipe / 1f1b / 1f1b-interleaved (V=2) all
+    reproduce the non-pipelined executor-path loss and gradients."""
+    out = run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+mesh = jax.make_mesh((4, 2), ("pipe", "data"))
+from repro.configs import get_config
+from repro.models import init_lm, lm_loss
+from repro.runtime.pipeline import make_pipeline_loss, stage_split_params
+cfg = get_config("qwen3-4b").reduced(n_layers=8, d_model=128)
+key = jax.random.PRNGKey(0)
+params = init_lm(key, cfg)
+m, Bm, S = 6, 4, 16
+toks = jax.random.randint(key, (m, Bm, S), 0, cfg.vocab_size)
+labels = jax.random.randint(jax.random.PRNGKey(1), (m, Bm, S), 0, cfg.vocab_size)
+batch = {"tokens": toks, "labels": labels}
+flat = {"tokens": toks.reshape(m*Bm, S), "labels": labels.reshape(m*Bm, S)}
+ref = lm_loss(params, flat, cfg)
+rg = jax.grad(lambda p: lm_loss(p, flat, cfg))(params)
+rs = np.asarray(rg["stacks"][0]["attn"]["wq"], np.float32)
+with mesh:
+    for sched, V in [("gpipe", 1), ("1f1b", 1), ("1f1b-interleaved", 2)]:
+        ps = stage_split_params(params, 4, V)
+        loss_fn = make_pipeline_loss(cfg, mesh, n_micro=m, schedule=sched,
+                                     n_chunks=V)
+        loss, grads = jax.jit(loss_fn)(ps, batch)
+        assert abs(float(loss) - float(ref)) < 1e-3, sched
+        for name in ["embed", "final_norm"]:
+            g = np.asarray(grads[name], np.float32)
+            r = np.asarray(rg[name], np.float32)
+            assert np.abs(g - r).max() < 0.02 * max(np.abs(r).max(), 1e-3) + 1e-4, (sched, name)
+        gs = np.asarray(grads["stacks"][0]["attn"]["wq"], np.float32)
+        # undo the (P, V, Lc) round-robin placement: stage s = v*P + i
+        order = np.transpose(gs, (1, 0, 2) + tuple(range(3, gs.ndim)))
+        flat_g = order.reshape(rs.shape)
+        assert np.abs(flat_g - rs).max() < 0.02 * np.abs(rs).max() + 1e-4, sched
+print("OK")
+""")
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_pipeline_1f1b_memory_schedule_matches_gpipe_8dev():
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np

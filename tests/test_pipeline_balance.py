@@ -52,6 +52,17 @@ def test_inflight_1f1b_vs_gpipe():
     assert inflight_microbatches(0, 4, 8, "gpipe") == 8
 
 
+def test_inflight_interleaved_per_chunk_accounting():
+    # P=4, V=2: device 0 warms up 2*3 + (2-1)*4 + 1 = 11 chunk activation
+    # sets = 5.5 full-stage units; device 3 (last) 2*0 + 4 + 1 = 5 -> 2.5
+    assert inflight_microbatches(0, 4, 16, "1f1b-interleaved", vpp=2) == 5.5
+    assert inflight_microbatches(3, 4, 16, "1f1b-interleaved", vpp=2) == 2.5
+    # capped by the m*V chunks that exist
+    assert inflight_microbatches(0, 4, 4, "1f1b-interleaved", vpp=2) == 4.0
+    # V=1 falls back to plain 1F1B
+    assert inflight_microbatches(0, 4, 8, "1f1b-interleaved", vpp=1) == 4
+
+
 def test_memory_partition_counteracts_1f1b():
     """Uniform layers: the memory-balanced 1F1B partition puts FEWER layers
     on shallow stages (they hold more in-flight micro-batches)."""

@@ -1,0 +1,65 @@
+"""ParallelPlan serialization: vpp_degree/schedule round-trip, loading of
+PR-1-era plan JSON (no vpp_degree key), search_stats exclusion from
+equality, and the micro-batch divisibility validation."""
+import json
+
+import pytest
+
+from repro.core import ParallelPlan, Strategy
+
+
+def _plan(**kw):
+    base = dict(n_devices=8, pp_degree=2, partition=[4, 4],
+                strategies=[Strategy((("dp", 2), ("tp", 2)), ckpt=True)] * 8,
+                global_batch=64, n_micro=8)
+    base.update(kw)
+    return ParallelPlan(**base)
+
+
+def test_roundtrip_with_schedule_and_vpp():
+    plan = _plan(schedule="1f1b-interleaved", vpp_degree=2,
+                 est_iter_time=0.5, est_throughput=128.0,
+                 search_stats={"stage_searches": 3.0})
+    plan2 = ParallelPlan.loads(plan.dumps())
+    assert plan2 == plan
+    assert plan2.schedule == "1f1b-interleaved"
+    assert plan2.vpp_degree == 2
+    assert plan2.search_stats == {"stage_searches": 3.0}
+    assert "1f1b-interleaved(V=2)" in plan2.summary()
+
+
+def test_backward_compat_pr1_json_defaults_vpp_to_1():
+    d = _plan().to_json()
+    del d["vpp_degree"]               # PR-1-era plan JSON
+    del d["search_stats"]
+    plan = ParallelPlan.from_json(d)
+    assert plan.vpp_degree == 1
+    assert plan.schedule == "1f1b"
+    # and an old-style dict that never heard of schedule either
+    d.pop("schedule")
+    assert ParallelPlan.from_json(json.loads(json.dumps(d))).schedule == "1f1b"
+
+
+def test_search_stats_excluded_from_equality():
+    a = _plan()
+    b = _plan()
+    a.search_stats = {"stage_cache_hits": 10.0}
+    b.search_stats = {"stage_cache_hits": 99.0}
+    assert a == b
+    b.vpp_degree = 2
+    assert a != b
+
+
+def test_micro_batch_divisibility_validated():
+    with pytest.raises(ValueError, match="not divisible"):
+        _plan(global_batch=10, n_micro=4)
+    with pytest.raises(ValueError, match="n_micro"):
+        _plan(n_micro=0)
+    with pytest.raises(ValueError, match="vpp_degree"):
+        _plan(vpp_degree=0)
+    # the same validation fires on deserialization
+    d = _plan().to_json()
+    d["n_micro"] = 3
+    with pytest.raises(ValueError, match="not divisible"):
+        ParallelPlan.from_json(d)
+    assert _plan(global_batch=64, n_micro=8).micro_batch_size == 8

@@ -1,0 +1,105 @@
+"""Schedule × vpp search axis: the optimizer treats the pipeline schedule
+as a searched dimension and picks interleaved virtual stages when the
+bubble dominates (ISSUE acceptance: tight memory, small m, large P)."""
+import pytest
+
+from repro.core import (GalvatronOptimizer, galvatron_variant, paper_8gpu,
+                        bubble_fraction, inflight_microbatches,
+                        pipeline_iter_time)
+from repro.core.layerspec import dense_layer
+
+GB = 1024 ** 3
+
+
+def _specs(n=16):
+    return [dense_layer(f"l{i}", 512, 1024, 16, 16, 4096,
+                        store_attn_matrix=True) for i in range(n)]
+
+
+def _search(schedules, *, budget_gb=3, vpp=(2,), fixed_pp=8, batch=8,
+            specs=None):
+    cfg = galvatron_variant("bmw")
+    cfg.batch_grid = [batch]
+    cfg.n_bins = 128
+    cfg.micro_candidates = 2
+    cfg.fixed_pp = fixed_pp
+    cfg.schedules = schedules
+    cfg.vpp_candidates = vpp
+    opt = GalvatronOptimizer(specs or _specs(),
+                             paper_8gpu().with_budget(budget_gb * GB), cfg)
+    return opt.optimize()
+
+
+def test_bubble_dominated_search_selects_interleaved():
+    # small m (= P = 8), tight 3G budget: the (P-1)/m bubble dominates and
+    # interleaving halves it — the search must find that
+    base = _search(("1f1b",))
+    both = _search(("1f1b", "1f1b-interleaved"))
+    assert base is not None and both is not None
+    assert both.schedule == "1f1b-interleaved"
+    assert both.vpp_degree > 1
+    # est_iter_time reflects the reduced bubble term
+    assert both.est_iter_time < base.est_iter_time
+    # consistent with the analytic model: bubble fraction halves at V=2
+    assert bubble_fraction(8, 8, 2) == pytest.approx(
+        bubble_fraction(8, 8, 1) / 2)
+
+
+def test_interleaved_plan_is_serializable_and_layoutable():
+    plan = _search(("1f1b", "1f1b-interleaved"))
+    # every stage can be cut into V non-empty chunks
+    assert min(plan.partition) >= plan.vpp_degree
+    import json
+
+    from repro.core import ParallelPlan
+    plan2 = ParallelPlan.loads(plan.dumps())
+    assert plan2 == plan
+    assert plan2.vpp_degree == plan.vpp_degree
+
+
+def test_interleaved_dropped_when_layers_too_few():
+    # P * V > L: the candidate must be skipped, not crash
+    plan = _search(("1f1b", "1f1b-interleaved"), vpp=(4,), specs=_specs(16),
+                   fixed_pp=8)
+    assert plan is not None
+    assert plan.schedule == "1f1b"          # 8 * 4 > 16 layers
+    assert plan.vpp_degree == 1
+
+
+def test_interleaved_requires_full_microbatch_groups():
+    # B=6, P=4 -> m=6 (ragged last group): the compiled interleaved
+    # program's bubble exceeds the analytic (P-1)/(m*V) term, so the
+    # candidate must be dropped rather than oversold
+    plan = _search(("1f1b", "1f1b-interleaved"), fixed_pp=4, batch=6,
+                   budget_gb=8)
+    assert plan is not None
+    assert plan.schedule == "1f1b"
+    assert plan.vpp_degree == 1
+
+
+def test_gpipe_axis_still_searched():
+    plan = _search(("gpipe",), budget_gb=8)
+    assert plan is not None and plan.schedule == "gpipe"
+
+
+def test_pipeline_iter_time_generalizes_eq9():
+    ts, ns = [1.0, 1.2, 1.1, 1.0], [0.9, 1.1, 1.0, 0.9]
+    # V=1 is exactly the seed Eq. 9 form
+    assert pipeline_iter_time(ts, ns, 8, 1) == pytest.approx(
+        7 * 1.1 + sum(ts))
+    # V=2 halves the non-critical drain contribution
+    assert pipeline_iter_time(ts, ns, 8, 2) == pytest.approx(
+        7 * 1.1 + 1.2 + (sum(ts) - 1.2) / 2)
+    # homogeneous stages: m*t + (P-1)*t/V
+    assert pipeline_iter_time([2.0] * 4, [2.0] * 4, 8, 2) == pytest.approx(
+        8 * 2.0 + 3 * 2.0 / 2)
+
+
+def test_interleaved_inflight_memory_exceeds_plain_1f1b_deep_stages():
+    # interleaving trades memory for bubble: deeper stages hold strictly
+    # more in-flight activation sets than plain 1F1B
+    P, m = 8, 64
+    for i in range(P):
+        plain = inflight_microbatches(i, P, m, "1f1b")
+        inter = inflight_microbatches(i, P, m, "1f1b-interleaved", vpp=2)
+        assert inter >= plain - 1e-12, i

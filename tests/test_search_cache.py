@@ -58,6 +58,31 @@ def test_seed_mode_identical_plans():
     assert fast == seed
 
 
+def test_stage_cache_persists_across_optimize_calls():
+    """ROADMAP "next rungs" item: repeated optimize() on one instance
+    reuses the stage cache; clear_cache() is the escape hatch."""
+    specs = _specs(8)
+    cluster = paper_8gpu().with_budget(8 * GB)
+    cfg = galvatron_variant("bmw")
+    cfg.batch_grid = [8, 16]
+    cfg.n_bins = 128
+    cfg.micro_candidates = 2
+    opt = GalvatronOptimizer(specs, cluster, cfg)
+    p1 = opt.optimize()
+    h1, m1 = opt.stats["stage_cache_hits"], opt.stats["stage_cache_misses"]
+    p2 = opt.optimize()
+    assert p2 == p1
+    # second sweep is identical -> every stage search is a hit, no new misses
+    assert opt.stats["stage_cache_misses"] == m1
+    assert opt.stats["stage_cache_hits"] > h1
+    # cumulative telemetry is threaded into the plan
+    assert p2.search_stats["stage_cache_hits"] == opt.stats["stage_cache_hits"]
+    opt.clear_cache()
+    p3 = opt.optimize()
+    assert p3 == p1
+    assert opt.stats["stage_cache_misses"] > m1     # cache really dropped
+
+
 def test_plan_carries_search_stats_but_compares_equal():
     specs = _specs(6)
     cluster = paper_8gpu().with_budget(8 * GB)
