@@ -26,17 +26,14 @@ import time
 
 from repro.configs.paper_models import paper_model_specs
 from repro.core import GalvatronOptimizer, galvatron_variant, paper_8gpu
-from repro.core.layerspec import dense_layer
+
+try:
+    from benchmarks.common import bert_huge_like
+except ImportError:          # invoked as a plain script
+    from common import bert_huge_like
 
 GB = 1024 ** 3
 REPO = pathlib.Path(__file__).resolve().parent.parent
-
-
-def bert_huge_like(n_layers: int):
-    """Homogeneous BERT-Huge-like stack (paper Table I geometry)."""
-    return [dense_layer(f"l{i}", 512, 1280, 20, 20, 5120,
-                        causal=False, store_attn_matrix=True)
-            for i in range(n_layers)]
 
 
 def bench_configs(smoke: bool):

@@ -12,6 +12,16 @@ from repro.core.optimizer import alpa_like, alpa_like_sdp
 
 GB = 1024 ** 3
 
+
+def bert_huge_like(n_layers: int):
+    """Homogeneous BERT-Huge-like stack (paper Table I geometry) — shared
+    by the search and frontier benchmarks so both measure the same model."""
+    from repro.core.layerspec import dense_layer
+    return [dense_layer(f"l{i}", 512, 1280, 20, 20, 5120,
+                        causal=False, store_attn_matrix=True)
+            for i in range(n_layers)]
+
+
 STRATEGY_ORDER = [
     "PyTorch DDP (DP)", "Megatron (TP)", "PyTorch GPipe (PP)",
     "FSDP/ZeRO-3 (SDP)", "DeepSpeed 3D", "Galvatron (DP+TP)",

@@ -3,7 +3,9 @@ primary contribution), in pure Python/NumPy — model- and runtime-agnostic."""
 from .cost_model import (CostModel, CostModelConfig, CostTables, LayerCosts,
                          bubble_fraction, pipeline_iter_time)
 from .decision_tree import SearchSpace, construct_search_space, pp_degree_candidates
-from .dp_search import StageSearchResult, dp_search_stage
+from .dp_search import (StageSearchResult, dp_search_stage,
+                        dp_search_stage_budgets)
+from .frontier import FrontierPoint, PlanFrontier
 from .hardware import (CLUSTERS, ClusterSpec, DeviceSpec, TPU_V5E,
                        paper_8gpu, paper_16gpu_high, paper_16gpu_low,
                        paper_32gpu_80g, paper_64gpu, tpu_v5e_multipod,

@@ -21,7 +21,7 @@ Communication volume factors follow §III-A2:
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+from typing import List, Optional, Sequence
 
 import numpy as np
 
@@ -355,6 +355,32 @@ class CostModel:
             mem_ms=ms,
             reshard=reshard,
         )
+
+    # ------------------------------------------------------------------
+    def plan_peak_stage_mem(self, specs: Sequence[LayerSpec],
+                            plan) -> List[float]:
+        """Recompute each pipeline stage's exact peak memory (Eq. 2) for a
+        finished :class:`~repro.core.plan.ParallelPlan`, via the scalar
+        ``layer_costs`` path — independent of the DP search machinery, so
+        it serves as the feasibility oracle for frontier plans (every
+        swept plan must fit under its own budget)."""
+        from .pipeline_balance import inflight_microbatches
+        B_m = plan.global_batch / plan.n_micro
+        out: List[float] = []
+        start = 0
+        for i, n in enumerate(plan.partition):
+            infl = inflight_microbatches(i, plan.pp_degree, plan.n_micro,
+                                         plan.schedule, plan.vpp_degree)
+            cum_f = peak = ms = 0.0
+            for l in range(start, start + n):
+                c = self.layer_costs(specs[l], plan.strategies[l], B_m,
+                                     inflight=infl)
+                cum_f += c.mem_f
+                peak = max(peak, cum_f + c.mem_b)
+                ms += c.mem_ms
+            out.append(peak + ms)
+            start += n
+        return out
 
     # ------------------------------------------------------------------
     def reshard_cost(self, spec: LayerSpec, strat_to: Strategy,

@@ -14,11 +14,20 @@ The transformation cost R(l, S_i, S_j) is instantiated as
 ``0 if levels(S_i) == levels(S_j) else r(l, S_j)`` (resharding into layout
 S_j); this keeps the paper's claimed O(L·E·|S|) complexity (a general
 R(i,j) matrix would cost O(L·E·|S|^2)).
+
+**Budget axis** (DESIGN.md §6): the forward DP table is independent of the
+memory budget once the quantization grid is fixed — the budget only selects
+where the descending E_fwd scan starts and when a backtracked chain is
+accepted.  ``dp_search_stage_budgets`` exploits this: one forward pass,
+then a per-budget argmax scan, so a whole budget sweep costs ~one search.
+``quant_bytes`` pins the grid (``bin_bytes = quant_bytes / n_bins``);
+results for budget ``b`` are bit-identical to a single-budget search at
+``b`` run on the same grid.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -84,6 +93,16 @@ def _exact_e_all(mem_f: np.ndarray, mem_b: np.ndarray, mem_ms: np.ndarray,
     return float((cum_f + b).max() + ms_total) if len(choice) else 0.0
 
 
+def _bin_cap(budget_bytes: float, quant_bytes: float, bin_bytes: float,
+             n_bins: int) -> int:
+    """Number of quantized bins usable under ``budget_bytes`` on the grid
+    anchored at ``quant_bytes`` (budget == quant recovers exactly
+    ``n_bins``, including the degenerate ``bin_bytes == 1.0`` clamp)."""
+    if budget_bytes >= quant_bytes:
+        return max(n_bins, int(budget_bytes / bin_bytes + 1e-9))
+    return int(budget_bytes / bin_bytes + 1e-9)
+
+
 def dp_search_stage(
     specs: Sequence[LayerSpec],
     strategies: Sequence[Strategy],
@@ -91,6 +110,7 @@ def dp_search_stage(
     micro_batch_size: float,
     budget_bytes: float,
     *,
+    quant_bytes: Optional[float] = None,
     inflight: float = 1,
     n_bins: int = 256,
     n_micro: int = 1,
@@ -105,20 +125,61 @@ def dp_search_stage(
     time would mis-rank strategies with expensive gradient synchronization
     but cheap steady-state micro-batches.
 
+    ``quant_bytes`` anchors the memory quantization grid (default: the
+    budget itself, the pre-frontier behaviour); pinning it across calls
+    with different budgets makes their results comparable bin-for-bin.
+
     ``tables`` takes precomputed (L, S) cost arrays (e.g. a row-slice of the
     full-model tables the optimizer caches per (B_m, inflight));
     ``use_tables=False`` dispatches to the seed reference implementation
     (per-pair scalar cost calls + per-strategy Python DP loops), kept as the
     benchmark baseline and differential-test oracle.
     """
+    return dp_search_stage_budgets(
+        specs, strategies, cost_model, micro_batch_size, [budget_bytes],
+        quant_bytes=quant_bytes, inflight=inflight, n_bins=n_bins,
+        n_micro=n_micro, tables=tables, use_tables=use_tables)[0]
+
+
+def dp_search_stage_budgets(
+    specs: Sequence[LayerSpec],
+    strategies: Sequence[Strategy],
+    cost_model: CostModel,
+    micro_batch_size: float,
+    budgets: Sequence[float],
+    *,
+    quant_bytes: Optional[float] = None,
+    inflight: float = 1,
+    n_bins: int = 256,
+    n_micro: int = 1,
+    tables: Optional[CostTables] = None,
+    use_tables: bool = True,
+) -> List[StageSearchResult]:
+    """Budget-axis stage search: one forward DP, one result per budget.
+
+    The DP table C depends on the budgets only through the shared
+    quantization grid (``bin_bytes = quant_bytes / n_bins``), so a whole
+    budget sweep runs the O(L·E·|S|) forward pass once; each budget then
+    pays only its descending E_fwd scan (backtracked chains are memoized
+    per bin and shared across budgets).  Every returned result is
+    bit-identical to ``dp_search_stage(..., budget, quant_bytes=quant)``.
+    """
+    budgets = [float(b) for b in budgets]
+    if not budgets:
+        return []
+    quant = float(quant_bytes) if quant_bytes is not None else max(budgets)
+
     if tables is None and not use_tables:
-        return dp_search_stage_reference(
-            specs, strategies, cost_model, micro_batch_size, budget_bytes,
-            inflight=inflight, n_bins=n_bins, n_micro=n_micro)
+        return [dp_search_stage_reference(
+                    specs, strategies, cost_model, micro_batch_size, b,
+                    quant_bytes=quant, inflight=inflight, n_bins=n_bins,
+                    n_micro=n_micro)
+                for b in budgets]
 
     L, S = len(specs), len(strategies)
     if L == 0:
-        return StageSearchResult(True, 0.0, 0.0, [], 0.0, 0.0, 0.0)
+        return [StageSearchResult(True, 0.0, 0.0, [], 0.0, 0.0, 0.0)
+                for _ in budgets]
 
     # ---- per (layer, strategy) cost tables -----------------------------
     if tables is None:
@@ -131,18 +192,21 @@ def dp_search_stage(
     time = time_ns + (time_sync - time_ns) / max(1, n_micro)
 
     # quantized forward-memory weight of each (layer, strategy)
-    bin_bytes = max(budget_bytes / n_bins, 1.0)
+    bin_bytes = max(quant / n_bins, 1.0)
+    caps = [_bin_cap(b, quant, bin_bytes, n_bins) for b in budgets]
+    nb_max = max(caps)
     w = np.ceil((mem_f + mem_ms) / bin_bytes).astype(np.int64)   # bins
     # No chain can weigh more than the sum of per-layer maxima (counting
     # only strategies that fit at all), so budget bins above that cap hold
     # exactly the same DP column as the cap bin — shrink the budget axis to
     # it.  The descending E_fwd scan then starts at the cap, which returns
     # the same chain the full-height scan would (identical C columns above).
-    w_valid = np.where(w <= n_bins, w, -1)
+    w_valid = np.where(w <= nb_max, w, -1)
     per_layer_max = w_valid.max(axis=1)
     if (per_layer_max < 0).any():       # some layer fits under no strategy
-        return StageSearchResult(False, INF, INF, [], INF, INF, 0.0)
-    E = int(min(n_bins, per_layer_max.sum()))
+        return [StageSearchResult(False, INF, INF, [], INF, INF, 0.0)
+                for _ in budgets]
+    E = int(min(nb_max, per_layer_max.sum()))
 
     (group_of, G, group_members, contiguous, group_starts,
      uniform) = _group_info(strategies)
@@ -199,7 +263,7 @@ def dp_search_stage(
         states.append(Cn)
         C = Cn
 
-    # ---- E_fwd sweep with exact E_all validation (Alg. 3) ---------------
+    # ---- per-budget E_fwd sweep with exact E_all validation (Alg. 3) ----
     b_up = float(np.max(mem_b)) if L else 0.0    # paper's b_up (max over l, S)
 
     final_best = C.min(axis=1)                   # per budget bin
@@ -232,15 +296,26 @@ def dp_search_stage(
             chain[l - 1] = j
         return chain
 
-    for e_bin in range(E, -1, -1):
-        if not feasible_bins[e_bin]:
-            continue
-        chain = backtrack(e_bin)
-        e_all = _exact_e_all(mem_f, mem_b, mem_ms, chain)
-        e_fwd_exact = float(sum(mem_f[l, chain[l]] + mem_ms[l, chain[l]]
-                                for l in range(L)))
-        if e_all <= budget_bytes or e_bin * bin_bytes <= budget_bytes - b_up:
+    # chains (and the expensive per-chain stats) depend on the bin, not the
+    # budget — memoize per bin so overlapping budget scans share the work
+    chain_cache: Dict[int, Tuple[np.ndarray, float]] = {}
+    result_cache: Dict[int, StageSearchResult] = {}
+
+    def chain_at(e_bin: int) -> Tuple[np.ndarray, float]:
+        got = chain_cache.get(e_bin)
+        if got is None:
+            chain = backtrack(e_bin)
+            got = (chain, _exact_e_all(mem_f, mem_b, mem_ms, chain))
+            chain_cache[e_bin] = got
+        return got
+
+    def result_at(e_bin: int) -> StageSearchResult:
+        res = result_cache.get(e_bin)
+        if res is None:
+            chain, e_all = chain_at(e_bin)
             idx = np.arange(L)
+            e_fwd_exact = float(sum(mem_f[l, chain[l]] + mem_ms[l, chain[l]]
+                                    for l in range(L)))
             t_sync = float(time_sync[idx, chain].sum())
             t_nosync = float(time_ns[idx, chain].sum())
             # add reshard costs along the chain (levels change ⇔ group changes)
@@ -249,7 +324,7 @@ def dp_search_stage(
                 if group_of[chain[l]] != group_of[chain[l - 1]]:
                     extra += reshard[l, chain[l]]
             ms_total = float(mem_ms[idx, chain].sum())
-            return StageSearchResult(
+            res = StageSearchResult(
                 feasible=True,
                 time=t_sync + extra,
                 time_nosync=t_nosync + extra,
@@ -258,8 +333,22 @@ def dp_search_stage(
                 e_fwd=e_fwd_exact,
                 mem_states=ms_total,
             )
+            result_cache[e_bin] = res
+        return res
 
-    return StageSearchResult(False, INF, INF, [], INF, INF, 0.0)
+    out: List[StageSearchResult] = []
+    infeasible = StageSearchResult(False, INF, INF, [], INF, INF, 0.0)
+    for b, cap in zip(budgets, caps):
+        found = infeasible
+        for e_bin in range(min(E, cap), -1, -1):
+            if not feasible_bins[e_bin]:
+                continue
+            chain, e_all = chain_at(e_bin)
+            if e_all <= b or e_bin * bin_bytes <= b - b_up:
+                found = result_at(e_bin)
+                break
+        out.append(found)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -276,6 +365,7 @@ def dp_search_stage_reference(
     micro_batch_size: float,
     budget_bytes: float,
     *,
+    quant_bytes: Optional[float] = None,
     inflight: float = 1,
     n_bins: int = 256,
     n_micro: int = 1,
@@ -287,10 +377,14 @@ def dp_search_stage_reference(
     only on the last of ``n_micro`` micro-batches, so optimizing raw sync
     time would mis-rank strategies with expensive gradient synchronization
     but cheap steady-state micro-batches.
+
+    ``quant_bytes`` anchors the bin grid exactly as in ``dp_search_stage``
+    (default: the budget itself — the seed behaviour).
     """
     L, S = len(specs), len(strategies)
     if L == 0:
         return StageSearchResult(True, 0.0, 0.0, [], 0.0, 0.0, 0.0)
+    quant = float(quant_bytes) if quant_bytes is not None else budget_bytes
 
     # ---- per (layer, strategy) cost tables -----------------------------
     time = np.full((L, S), INF)       # DP objective (m-amortized)
@@ -312,9 +406,9 @@ def dp_search_stage_reference(
             reshard[l, j] = cost_model.reshard_cost(spec, s, micro_batch_size)
 
     # quantized forward-memory weight of each (layer, strategy)
-    bin_bytes = max(budget_bytes / n_bins, 1.0)
+    bin_bytes = max(quant / n_bins, 1.0)
     w = np.ceil((mem_f + mem_ms) / bin_bytes).astype(np.int64)   # bins
-    E = n_bins
+    E = _bin_cap(budget_bytes, quant, bin_bytes, n_bins)
 
     # strategies grouped by identical levels (R == 0 within a group)
     level_key = {}

@@ -14,8 +14,11 @@ every row of the paper's tables is produced by this one class.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
+import os
 import time as _time
+from concurrent.futures import ThreadPoolExecutor, as_completed
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -23,7 +26,8 @@ import numpy as np
 from .cost_model import (CostModel, CostModelConfig, CostTables,
                          pipeline_iter_time)
 from .decision_tree import SearchSpace, construct_search_space
-from .dp_search import StageSearchResult, dp_search_stage
+from .dp_search import StageSearchResult, dp_search_stage_budgets
+from .frontier import FrontierPoint, PlanFrontier
 from .hardware import ClusterSpec
 from .layerspec import LayerSpec
 from .pipeline_balance import (PartitionEval, adjust_partition,
@@ -64,6 +68,14 @@ class OptimizerConfig:
     # the original per-candidate / per-pair behaviour for benchmarking)
     enable_stage_cache: bool = True            # memoize dp_search_stage results
     vectorized_cost: bool = True               # batched (L,S) cost tables
+    # memory-budget constraint in bytes; None => cluster.budget().  Distinct
+    # from the DP quantization grid: two searches are comparable
+    # bin-for-bin only when their ``quant_bytes`` coincide (DESIGN.md §6)
+    budget_bytes: Optional[float] = None
+    # quantization-grid anchor; None => max of the active budget axis
+    # (single-budget searches then quantize on their own budget — the
+    # pre-frontier behaviour)
+    quant_bytes: Optional[float] = None
 
 
 def default_batch_grid(max_batch: int) -> List[int]:
@@ -72,6 +84,30 @@ def default_batch_grid(max_batch: int) -> List[int]:
         grid.append(b)
         b = b + max(8, b // 2)
     return grid
+
+
+_MISS = object()
+
+
+class _ShardCache(dict):
+    """Worker-local memo shard (parallel sweep, DESIGN.md §6).
+
+    Reads fall through to the shared base cache (filled before the pool
+    fanned out, never mutated while workers run); writes stay local and are
+    merged back into the base once the worker's (B, P) candidate is done.
+    Iteration / ``update()`` expose only the local writes, which is exactly
+    what the merge wants.
+    """
+
+    def __init__(self, base: dict):
+        super().__init__()
+        self._base = base
+
+    def get(self, key, default=None):
+        v = super().get(key, _MISS)
+        if v is not _MISS:
+            return v
+        return self._base.get(key, default)
 
 
 class GalvatronOptimizer:
@@ -109,10 +145,18 @@ class GalvatronOptimizer:
         # The caches deliberately persist across optimize() calls on one
         # instance (re-searches after a batch-grid or schedule-axis tweak
         # are mostly hits); ``clear_cache()`` is the escape hatch.
-        self._stage_cache: Dict[Tuple, StageSearchResult] = {}
+        self._stage_cache: Dict[Tuple, Tuple[StageSearchResult, ...]] = {}
         self._table_cache: Dict[Tuple, CostTables] = {}
         self._ref_cache: Dict[Tuple, Tuple[np.ndarray, np.ndarray]] = {}
         self._part_cache: Dict[Tuple, Tuple[List[int], List[int]]] = {}
+        # active budget axis: every stage search returns one result per
+        # budget (optimize() runs a 1-point axis; sweep_budgets() the full
+        # frontier).  The quantization grid is pinned per axis so results
+        # are comparable bin-for-bin across its budgets.
+        self._budget_axis: Tuple[float, ...] = (self._single_budget(),)
+        self._quant: float = (float(self.cfg.quant_bytes)
+                              if self.cfg.quant_bytes is not None
+                              else max(self._budget_axis))
         # both speed knobs off = seed-faithful baseline (used by
         # benchmarks/bench_search.py): no memoization anywhere
         self._seed_mode = (not self.cfg.enable_stage_cache
@@ -129,6 +173,29 @@ class GalvatronOptimizer:
                  self.cost.profiled_times.get(sp.name)),
                 len(sig_of))
             for sp in self.specs)
+
+    # ------------------------------------------------------------------
+    # budget axis
+    # ------------------------------------------------------------------
+    def _single_budget(self) -> float:
+        return (float(self.cfg.budget_bytes)
+                if self.cfg.budget_bytes is not None
+                else float(self.cluster.budget()))
+
+    def _set_budget_axis(self, axis: Tuple[float, ...]) -> None:
+        """Point the engine at a (sorted) budget axis.
+
+        Stage-search memo entries are axis-shaped (one result per budget),
+        so changing the axis drops only ``_stage_cache``; the budget-
+        independent caches (cost tables, reference costs, seed partitions)
+        survive — that is the incremental-re-search path when only the
+        budget changes.
+        """
+        quant = (float(self.cfg.quant_bytes)
+                 if self.cfg.quant_bytes is not None else max(axis))
+        if (axis, quant) != (self._budget_axis, self._quant):
+            self._stage_cache.clear()
+            self._budget_axis, self._quant = axis, quant
 
     # ------------------------------------------------------------------
     # layer-level reference costs (used for initial partitions)
@@ -190,13 +257,15 @@ class GalvatronOptimizer:
 
     def _stage_search(self, a: int, b: int, strategies: List[Strategy],
                       sid: int, B_m: float, inflight: int,
-                      n_micro: int) -> StageSearchResult:
-        """dp_search_stage over specs[a:b], memoized.
+                      n_micro: int) -> Tuple[StageSearchResult, ...]:
+        """Budget-axis stage search over specs[a:b], memoized — one result
+        per budget on the active axis from a single forward DP.
 
         The BMW adjustment queue mostly re-evaluates identical layer ranges
         (a one-layer boundary shift changes only the two adjacent stages),
-        and the p_t / p_m seed partitions overlap heavily — so the cache
-        turns most of the O(P) work per candidate into dict lookups.
+        the p_t / p_m seed partitions overlap heavily, and every budget on
+        the axis shares one memo entry — so the cache turns most of the
+        O(P·K) work per candidate into dict lookups.
         """
         self.stats["stage_searches"] += 1
         key = (self._layer_sig[a:b], B_m, inflight, n_micro, sid)
@@ -207,12 +276,12 @@ class GalvatronOptimizer:
                 return res
             self.stats["stage_cache_misses"] += 1
         tables = self._full_tables(strategies, sid, B_m, inflight)
-        res = dp_search_stage(
+        res = tuple(dp_search_stage_budgets(
             self.specs[a:b], strategies, self.cost, B_m,
-            self.cluster.budget(), inflight=inflight,
+            self._budget_axis, quant_bytes=self._quant, inflight=inflight,
             n_bins=self.cfg.n_bins, n_micro=n_micro,
             tables=tables.rows(a, b) if tables is not None else None,
-            use_tables=self.cfg.vectorized_cost)
+            use_tables=self.cfg.vectorized_cost))
         if self.cfg.enable_stage_cache:
             self._stage_cache[key] = res
         return res
@@ -225,13 +294,17 @@ class GalvatronOptimizer:
 
     def clear_cache(self) -> None:
         """Drop every memo cache (stage searches, cost tables, reference
-        costs, seed partitions).  The caches persist across ``optimize()``
-        calls by design; call this when the instance's cost inputs change
-        under it (e.g. mutated ``profiled_times``)."""
+        costs, seed partitions) and zero the telemetry counters.  The caches
+        persist across ``optimize()`` calls by design; call this when the
+        instance's cost inputs change under it (e.g. mutated
+        ``profiled_times``).  A cleared optimizer behaves exactly like a
+        freshly constructed one: same plan, same cold-start stats."""
         self._stage_cache.clear()
         self._table_cache.clear()
         self._ref_cache.clear()
         self._part_cache.clear()
+        for k in self.stats:
+            self.stats[k] = 0.0 if k == "search_seconds" else 0
 
     # ------------------------------------------------------------------
     # pipeline-schedule search axis
@@ -270,47 +343,62 @@ class GalvatronOptimizer:
                         P: int, strategies: Optional[List[Strategy]] = None,
                         sid: Optional[int] = None, schedule: Optional[str] = None,
                         vpp: int = 1,
-                        ) -> Tuple[float, PartitionEval, List[Strategy]]:
+                        ) -> List[Tuple[float, PartitionEval, List[Strategy]]]:
+        """Evaluate one partition on every budget of the active axis.
+
+        Returns one ``(iter_time, PartitionEval, strategies)`` triple per
+        budget; the per-stage DP runs once (budget axis inside
+        ``_stage_search``), the per-budget assembly here is pure Python.
+        """
         B_m = B / m
         schedule = schedule or self.cfg.schedule
         if strategies is None or sid is None:
             strategies, sid = self._strategies_for(P)
+        K = len(self._budget_axis)
         if vpp > 1 and min(partition) < vpp:
             # a stage needs >= V layers to be cut into V virtual chunks
             ev = PartitionEval(list(partition), [INF] * P, [INF] * P,
                                [INF] * P, False)
-            return INF, ev, [Strategy(())] * sum(partition)
+            bad = (INF, ev, [Strategy(())] * sum(partition))
+            return [bad] * K
         bounds = stage_bounds(partition)
-        stage_times, stage_ns, stage_mems, all_strats = [], [], [], []
-        feasible = True
-        for i, (a, b) in enumerate(bounds):
-            infl = inflight_microbatches(i, P, m, schedule, vpp)
-            res = self._stage_search(a, b, strategies, sid, B_m, infl, m)
-            if not res.feasible:
-                feasible = False
-                stage_times.append(INF)
-                stage_ns.append(INF)
-                stage_mems.append(INF)
-                all_strats.extend([Strategy(())] * (b - a))
+        per_stage = [self._stage_search(
+                         a, b, strategies, sid, B_m,
+                         inflight_microbatches(i, P, m, schedule, vpp), m)
+                     for i, (a, b) in enumerate(bounds)]
+        out: List[Tuple[float, PartitionEval, List[Strategy]]] = []
+        for k in range(K):
+            stage_times, stage_ns, stage_mems, all_strats = [], [], [], []
+            feasible = True
+            for i, (a, b) in enumerate(bounds):
+                res = per_stage[i][k]
+                if not res.feasible:
+                    feasible = False
+                    stage_times.append(INF)
+                    stage_ns.append(INF)
+                    stage_mems.append(INF)
+                    all_strats.extend([Strategy(())] * (b - a))
+                    continue
+                p2p = 0.0
+                if P > 1 and b < len(self.specs):
+                    dd = res.strategies[-1].data_degree if res.strategies else 1
+                    # interleaved: each micro-batch crosses every device
+                    # boundary V times (once per virtual chunk)
+                    p2p = vpp * self.cost.p2p_cost(self.specs[b - 1], B_m, dd)
+                stage_times.append(res.time + p2p)
+                stage_ns.append(res.time_nosync + p2p)
+                stage_mems.append(res.e_all)
+                all_strats.extend(res.strategies)
+            ev = PartitionEval(list(partition), stage_times, stage_ns,
+                               stage_mems, feasible)
+            if not feasible:
+                out.append((INF, ev, all_strats))
                 continue
-            p2p = 0.0
-            if P > 1 and b < len(self.specs):
-                dd = res.strategies[-1].data_degree if res.strategies else 1
-                # interleaved: each micro-batch crosses every device
-                # boundary V times (once per virtual chunk)
-                p2p = vpp * self.cost.p2p_cost(self.specs[b - 1], B_m, dd)
-            stage_times.append(res.time + p2p)
-            stage_ns.append(res.time_nosync + p2p)
-            stage_mems.append(res.e_all)
-            all_strats.extend(res.strategies)
-        ev = PartitionEval(list(partition), stage_times, stage_ns,
-                           stage_mems, feasible)
-        if not feasible:
-            return INF, ev, all_strats
-        # Eq. 9 (generalized over V): steady state paced by the slowest
-        # no-sync stage; the drain's bubble term shrinks by 1/V
-        iter_time = pipeline_iter_time(stage_times, stage_ns, m, vpp)
-        return iter_time, ev, all_strats
+            # Eq. 9 (generalized over V): steady state paced by the slowest
+            # no-sync stage; the drain's bubble term shrinks by 1/V
+            out.append((pipeline_iter_time(stage_times, stage_ns, m, vpp),
+                        ev, all_strats))
+        return out
 
     # ------------------------------------------------------------------
     def _micro_candidates(self, B: int, P: int) -> List[int]:
@@ -325,22 +413,46 @@ class GalvatronOptimizer:
         return cands
 
     # ------------------------------------------------------------------
-    def _search_pp(self, B: int, P: int) -> Optional[ParallelPlan]:
-        """Best plan for one (batch, PP degree): Alg. 1 inner body crossed
-        with the schedule × vpp axis, plus the Alg. 2 partition-adjustment
-        queue when bi_objective is on."""
+    def _search_pp(self, B: int, P: int) -> Optional[List[Optional[ParallelPlan]]]:
+        """Best plan per budget for one (batch, PP degree): Alg. 1 inner
+        body crossed with the schedule × vpp axis, plus the Alg. 2
+        partition-adjustment queue when bi_objective is on.
+
+        The Alg. 2 queue trajectory depends on the budget (criterion (2) of
+        the validation, and which strategies the DP picked), so each budget
+        runs its *own* cheap control-flow queue — but all of them draw from
+        the same memoized budget-axis stage searches, so the expensive work
+        is shared.  A 1-point axis reproduces the pre-frontier serial
+        search move for move.
+        """
         L = len(self.specs)
         if P > L:
             return None
-        best: Optional[ParallelPlan] = None
+        K = len(self._budget_axis)
+        best: List[Optional[ParallelPlan]] = [None] * K
         strategies, sid = self._strategies_for(P)
         for m in self._micro_candidates(B, P):
           for sched, vpp in self._schedule_candidates(P, m):
             B_m = B / m
             group = self.cluster.n_devices // P
+            # per-(m, sched, vpp) eval memo: the per-budget queues revisit
+            # mostly the same partitions; the underlying stage searches are
+            # already cached, this just skips the per-budget re-assembly
+            evals: Dict[Tuple[int, ...],
+                        List[Tuple[float, PartitionEval, List[Strategy]]]] = {}
+
+            def ev_of(part):
+                pk = tuple(part)
+                r = evals.get(pk)
+                if r is None:
+                    r = self._eval_partition(part, B, m, P, strategies,
+                                             sid, sched, vpp)
+                    evals[pk] = r
+                return r
+
             if P == 1:
                 partitions = [[L]]
-                pt_max_mem = INF
+                pt_max_mems = [INF] * K
             else:
                 pkey = (B_m, group, P, m, sched, vpp)
                 seeds = None if self._seed_mode else self._part_cache.get(pkey)
@@ -353,47 +465,45 @@ class GalvatronOptimizer:
                     self._part_cache[pkey] = seeds
                 p_m, p_t = seeds
                 # pt_max_mem: criterion (3) reference — max stage memory
-                # under the time-balanced partition
-                _, ev_t, _ = self._eval_partition(p_t, B, m, P, strategies,
-                                                  sid, sched, vpp)
-                pt_max_mem = max(ev_t.stage_mems) if ev_t.feasible else INF
+                # under the time-balanced partition (per budget)
+                ev_ts = ev_of(p_t)
+                pt_max_mems = [max(ev_t.stage_mems) if ev_t.feasible else INF
+                               for _, ev_t, _ in ev_ts]
                 # Alg. 2 seeds the queue with p_m and adjusts toward p_t;
                 # p_t itself is also evaluated (the optimum lies between the
                 # two extremes, Eq. 7).
                 partitions = [p_m, p_t]
-            queue = list(partitions)
-            seen = {tuple(p) for p in queue}
-            iters = 0
-            while queue and iters <= self.cfg.max_adjust_iters:
-                part = queue.pop(0)
-                iters += 1
-                t, ev, strats = self._eval_partition(part, B, m, P,
-                                                     strategies, sid,
-                                                     sched, vpp)
-                if ev.feasible and t < INF:
-                    if best is None or B / t > best.est_throughput:
-                        a_t, a_m = balance_degrees(ev.stage_times, ev.stage_mems)
-                        best = ParallelPlan(
-                            n_devices=self.cluster.n_devices,
-                            pp_degree=P, partition=list(part),
-                            strategies=strats, global_batch=B, n_micro=m,
-                            schedule=sched, vpp_degree=vpp,
-                            est_iter_time=t, est_throughput=B / t,
-                            est_stage_mem=ev.stage_mems,
-                            alpha_t=a_t, alpha_m=a_m)
-                    if self.cfg.bi_objective and P > 1:
-                        for cand in adjust_partition(part, ev.stage_times):
-                            key = tuple(cand)
-                            if key in seen:
-                                continue
-                            t2, ev2, _ = self._eval_partition(cand, B, m, P,
-                                                              strategies, sid,
-                                                              sched, vpp)
-                            if validate_adjustment(
-                                    ev2, max(ev.stage_times),
-                                    self.cluster.budget(), pt_max_mem):
-                                seen.add(key)
-                                queue.append(cand)
+            for k, budget in enumerate(self._budget_axis):
+                queue = [list(p) for p in partitions]
+                seen = {tuple(p) for p in queue}
+                iters = 0
+                while queue and iters <= self.cfg.max_adjust_iters:
+                    part = queue.pop(0)
+                    iters += 1
+                    t, ev, strats = ev_of(part)[k]
+                    if ev.feasible and t < INF:
+                        if best[k] is None or B / t > best[k].est_throughput:
+                            a_t, a_m = balance_degrees(ev.stage_times,
+                                                       ev.stage_mems)
+                            best[k] = ParallelPlan(
+                                n_devices=self.cluster.n_devices,
+                                pp_degree=P, partition=list(part),
+                                strategies=strats, global_batch=B, n_micro=m,
+                                schedule=sched, vpp_degree=vpp,
+                                est_iter_time=t, est_throughput=B / t,
+                                est_stage_mem=ev.stage_mems,
+                                alpha_t=a_t, alpha_m=a_m)
+                        if self.cfg.bi_objective and P > 1:
+                            for cand in adjust_partition(part, ev.stage_times):
+                                key = tuple(cand)
+                                if key in seen:
+                                    continue
+                                t2, ev2, _ = ev_of(cand)[k]
+                                if validate_adjustment(
+                                        ev2, max(ev.stage_times),
+                                        budget, pt_max_mems[k]):
+                                    seen.add(key)
+                                    queue.append(cand)
         return best
 
     # ------------------------------------------------------------------
@@ -404,33 +514,173 @@ class GalvatronOptimizer:
         telemetry keeps accumulating in ``self.stats`` and is snapshotted
         into the returned plan's ``search_stats``); ``clear_cache()``
         resets them."""
+        return self._sweep_axis((self._single_budget(),),
+                                verbose=verbose)[0]
+
+    def sweep_budgets(self, budgets: Sequence[float], *,
+                      parallel: bool = False,
+                      max_workers: Optional[int] = None,
+                      verbose: bool = False) -> PlanFrontier:
+        """Compute the throughput-vs-memory frontier over ``budgets`` in
+        ~one search (DESIGN.md §6).
+
+        The stage DP runs once per memo key with a budget *axis* and the
+        budget-independent caches (cost tables, reference costs, seed
+        partitions) are shared, so a K-point sweep costs close to a single
+        ``optimize()`` instead of K of them.  Each budget's plan is
+        byte-identical to a serial ``optimize()`` at that budget on the
+        same quantization grid (``quant_bytes = max(budgets)`` unless
+        pinned in the config).
+
+        Grid-resolution tradeoff: the DP resolves memory in
+        ``quant_bytes / n_bins`` steps, so on a wide sweep the small
+        budgets are quantized more coarsely than a dedicated search at
+        that budget would be (slightly worse plans, possibly a spurious
+        OOM right at the feasibility edge).  Pin
+        ``cfg.quant_bytes = min(budgets)`` to give every point
+        dedicated-search resolution — the larger budgets' scans then span
+        proportionally more bins, costing more DP time.
+
+        ``parallel=True`` fans the independent (B, P) outer candidates
+        across a thread pool; workers read the shared memo caches and
+        write to private shards that are merged back (with their hit/miss
+        telemetry) after the pool drains — results are identical to the
+        serial sweep, in any interleaving.
+        """
+        axis = tuple(sorted({float(b) for b in budgets}))
+        if not axis:
+            raise ValueError("sweep_budgets needs at least one budget")
+        plans = self._sweep_axis(axis, verbose=verbose, parallel=parallel,
+                                 max_workers=max_workers)
+        points = [FrontierPoint(budget_bytes=b, plan=p,
+                                predicted_throughput=(p.est_throughput
+                                                      if p else 0.0))
+                  for b, p in zip(axis, plans)]
+        return PlanFrontier(points=points, quant_bytes=self._quant,
+                            search_stats=dict(self.stats))
+
+    def _sweep_axis(self, axis: Tuple[float, ...], *, verbose: bool = False,
+                    parallel: bool = False,
+                    max_workers: Optional[int] = None,
+                    ) -> List[Optional[ParallelPlan]]:
+        """Shared Alg. 1 outer loop over a budget axis: per-budget best
+        plans, with the per-budget OOM early-stop of the serial search (a
+        budget that OOMed at two consecutive batch sizes stops growing B —
+        exactly when its serial counterpart would have)."""
         t0 = _time.time()
-        grid = list(self.cfg.batch_grid or default_batch_grid(self.cfg.max_batch))
-        best: Optional[ParallelPlan] = None
-        consecutive_oom = 0
-        pp_degrees = ([self.cfg.fixed_pp] if self.cfg.fixed_pp
-                      else sorted(self.search_space.per_pp))
+        self._set_budget_axis(axis)
+        K = len(axis)
+        grid = list(self.cfg.batch_grid
+                    or default_batch_grid(self.cfg.max_batch))
+        pp_degrees = [P for P in ([self.cfg.fixed_pp] if self.cfg.fixed_pp
+                                  else sorted(self.search_space.per_pp))
+                      if P is not None and self.cluster.n_devices % P == 0]
+        results: Dict[Tuple[int, int], Optional[List[Optional[ParallelPlan]]]]
+        if parallel:
+            results = self._parallel_bp_results(grid, pp_degrees, max_workers)
+        best: List[Optional[ParallelPlan]] = [None] * K
+        active = [True] * K
+        consecutive_oom = [0] * K
         for B in grid:
-            found = False
-            for P in pp_degrees:
-                if P is None or self.cluster.n_devices % P:
-                    continue
-                plan = self._search_pp(B, P)
-                if plan is None:
-                    continue
-                found = True
-                if best is None or plan.est_throughput > best.est_throughput:
-                    best = plan
-                    if verbose:
-                        print(f"[B={B} P={P}] tpt={plan.est_throughput:.2f} "
-                              f"{plan.summary()}")
-            consecutive_oom = 0 if found else consecutive_oom + 1
-            if consecutive_oom >= 2:     # everything OOMs: stop enlarging B
+            if not any(active):
                 break
+            found = [False] * K
+            for P in pp_degrees:
+                plans = (results[(B, P)] if parallel
+                         else self._search_pp(B, P))
+                if plans is None:
+                    continue
+                for k in range(K):
+                    if not active[k] or plans[k] is None:
+                        continue
+                    found[k] = True
+                    if (best[k] is None
+                            or plans[k].est_throughput > best[k].est_throughput):
+                        best[k] = plans[k]
+                        if verbose:
+                            print(f"[B={B} P={P} budget={axis[k]/2**30:.1f}G] "
+                                  f"tpt={plans[k].est_throughput:.2f} "
+                                  f"{plans[k].summary()}")
+            for k in range(K):
+                if not active[k]:
+                    continue
+                consecutive_oom[k] = 0 if found[k] else consecutive_oom[k] + 1
+                if consecutive_oom[k] >= 2:  # everything OOMs: stop growing B
+                    active[k] = False
         self.stats["search_seconds"] = _time.time() - t0
-        if best is not None:
-            best.search_stats = dict(self.stats)
+        for plan in best:
+            if plan is not None:
+                plan.search_stats = dict(self.stats)
         return best
+
+    # ------------------------------------------------------------------
+    # parallel (B, P) fan-out (DESIGN.md §6)
+    # ------------------------------------------------------------------
+    def _make_shard(self) -> "GalvatronOptimizer":
+        """A worker-view of this optimizer: shares the immutable inputs
+        (specs, cost model, search space, budget axis) but writes stage-
+        search memo entries and telemetry into private shards, leaving the
+        parent's stage cache untouched until merge.
+
+        The table / reference / partition caches are shared *directly*:
+        their entries are deterministic, they are never iterated, and
+        CPython's GIL makes individual dict get/set atomic — so publishing
+        a freshly built cost table immediately spares every other worker
+        the same (expensive, budget-independent) build.  A lost race
+        merely rebuilds an identical value.
+        """
+        shard = copy.copy(self)
+        shard.stats = {k: (0.0 if k == "search_seconds" else 0)
+                       for k in self.stats}
+        shard._stage_cache = _ShardCache(self._stage_cache)
+        return shard
+
+    def _merge_shard(self, shard: "GalvatronOptimizer") -> None:
+        """Fold a worker shard back into the shared memo + telemetry.
+        ``update()`` on a shard only sees its local writes; counters are
+        summed so hits + misses == lookups holds across the merged stats."""
+        for k, v in shard.stats.items():
+            if k != "search_seconds":
+                self.stats[k] += v
+        self._stage_cache.update(shard._stage_cache)
+
+    def _parallel_bp_results(
+            self, grid: Sequence[int], pp_degrees: Sequence[int],
+            max_workers: Optional[int],
+    ) -> Dict[Tuple[int, int], Optional[List[Optional[ParallelPlan]]]]:
+        """Run every (B, P) outer candidate on a thread pool.
+
+        Candidates are independent given the memo caches, and stage-search
+        results are deterministic functions of their inputs, so computing
+        them eagerly (even past a budget's OOM stopping point — the merge
+        in ``_sweep_axis`` re-applies the serial stopping rule) changes
+        nothing about the returned plans.
+        """
+        tasks = [(B, P) for B in grid for P in pp_degrees]
+
+        def run(bp: Tuple[int, int]):
+            shard = self._make_shard()
+            return bp, shard._search_pp(*bp), shard
+
+        results: Dict[Tuple[int, int],
+                      Optional[List[Optional[ParallelPlan]]]] = {}
+        # one worker per core: the DP is a stream of small NumPy calls, so
+        # oversubscription (the executor's cpu+4 default) turns GIL
+        # hand-offs into a convoy and *slows the sweep several-fold*
+        max_workers = max_workers or os.cpu_count() or 2
+        with ThreadPoolExecutor(max_workers=max_workers) as pool:
+            futures = [pool.submit(run, bp) for bp in tasks]
+            # merge each shard as its worker finishes (single consumer
+            # thread): later tasks' fall-through reads then hit work the
+            # early finishers already did.  CPython dict get/set atomicity
+            # makes the concurrent read-mostly access safe, and entry
+            # values are deterministic, so any interleaving yields the
+            # same plans.
+            for fut in as_completed(futures):
+                bp, plans, shard = fut.result()
+                results[bp] = plans
+                self._merge_shard(shard)
+        return results
 
 
 # --------------------------------------------------------------------------

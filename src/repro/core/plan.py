@@ -96,6 +96,21 @@ class ParallelPlan:
     def dumps(self) -> str:
         return json.dumps(self.to_json(), indent=2)
 
+    def canonical_json(self) -> Dict:
+        """``to_json()`` minus the ``search_stats`` telemetry — everything
+        that defines the plan's execution semantics and estimates, nothing
+        that depends on how the search was run (caches, workers, wall
+        time).  Two searches agree iff their canonical JSON agrees."""
+        d = self.to_json()
+        d.pop("search_stats", None)
+        return d
+
+    def canonical_dumps(self) -> str:
+        """Deterministic byte representation of :meth:`canonical_json`
+        (sorted keys, no whitespace variance) — the byte-identity oracle
+        used by the frontier differential tests and benchmarks."""
+        return json.dumps(self.canonical_json(), sort_keys=True)
+
     @staticmethod
     def from_json(d: Dict) -> "ParallelPlan":
         return ParallelPlan(

@@ -1,0 +1,181 @@
+"""Budget-sweep strategy search CLI (the frontier engine, DESIGN.md §6).
+
+Computes the paper's throughput-vs-memory story in one invocation: either a
+single plan (``--budget``) or the whole Pareto frontier over a budget axis
+(``--budget-sweep``), searched in ~one pass instead of one full search per
+budget.
+
+    # 8-point frontier for the paper's BERT-Huge-32 on the 8-GPU cluster
+    PYTHONPATH=src python -m repro.launch.search --model bert-huge-32 \\
+        --cluster 8x-rtx-titan-pcie --budget-sweep 4,6,...,18 \\
+        --out frontier.json
+
+    # assigned architecture on a TPU pod, parallel (B, P) fan-out
+    PYTHONPATH=src python -m repro.launch.search --arch qwen3-4b --seq 2048 \\
+        --cluster tpu-v5e-pod-256 --budget-sweep 8,10,12,16 --parallel
+
+``--budget-sweep`` takes GB values: an explicit comma list (``4,6,8``) or an
+arithmetic ellipsis ``a,b,...,z`` expanded with step ``b - a`` (so
+``8,16,...,80`` means 8, 16, 24, …, 80).  The frontier (budgets, plans,
+predicted throughputs, knee points) is printed as a table and written as
+JSON via ``PlanFrontier.dumps`` when ``--out`` is given; a single-budget
+run writes the plan JSON instead.  ``--parallel`` fans the independent
+(B, P) outer candidates across a thread pool — byte-identical plans,
+aggregated cache telemetry.
+
+The model comes from ``--arch`` (an assigned architecture id, searched at
+``--seq``) or ``--model`` (a paper evaluation model, fixed geometry).  The
+cluster comes from ``--cluster`` (a preset name from ``repro.core.CLUSTERS``)
+with optional ``--devices`` override.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List
+
+from repro.core import (CLUSTERS, GalvatronOptimizer, galvatron_variant)
+
+GB = 1024 ** 3
+
+
+def parse_budget_sweep(text: str) -> List[float]:
+    """GB values: ``4,6,8`` or arithmetic ellipsis ``a,b,...,z``."""
+    parts = [p.strip() for p in text.split(",") if p.strip()]
+    if "..." in parts:
+        i = parts.index("...")
+        if i < 2 or i != len(parts) - 2:
+            raise ValueError(
+                f"ellipsis sweep must look like a,b,...,z  (got {text!r})")
+        head = [float(p) for p in parts[:i]]
+        stop = float(parts[i + 1])
+        step = head[-1] - head[-2]
+        if step <= 0:
+            raise ValueError(f"non-increasing ellipsis step in {text!r}")
+        vals = list(head)
+        while vals[-1] + step <= stop + 1e-9:
+            vals.append(vals[-1] + step)
+        return [v * GB for v in vals]
+    return [float(p) * GB for p in parts]
+
+
+def _specs_for(args):
+    if args.model:
+        from repro.configs.paper_models import paper_model_specs
+        return paper_model_specs(args.model), args.model
+    if args.arch:
+        from repro.configs import get_config
+        from repro.configs.specs import layerspecs_for
+        cfg = get_config(args.arch)
+        return layerspecs_for(cfg, args.seq), f"{args.arch}@seq{args.seq}"
+    raise SystemExit("one of --arch / --model is required")
+
+
+def _cluster_for(args):
+    if args.cluster not in CLUSTERS:
+        raise SystemExit(f"unknown cluster {args.cluster!r}; "
+                         f"have {sorted(CLUSTERS)}")
+    cluster = CLUSTERS[args.cluster]
+    if args.devices:
+        cluster = cluster.with_devices(args.devices)
+    return cluster
+
+
+def build_optimizer(specs, cluster, args) -> GalvatronOptimizer:
+    ocfg = galvatron_variant(args.variant)
+    if args.batch_grid:
+        ocfg.batch_grid = [int(b) for b in args.batch_grid.split(",")]
+    ocfg.n_bins = args.n_bins
+    ocfg.micro_candidates = args.micro_candidates
+    if args.max_pp:
+        ocfg.max_pp = args.max_pp
+    if args.schedules:
+        ocfg.schedules = tuple(args.schedules.split(","))
+    return GalvatronOptimizer(specs, cluster, ocfg)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
+    src = ap.add_argument_group("model")
+    src.add_argument("--arch", help="assigned architecture id (see configs)")
+    src.add_argument("--model", help="paper evaluation model name")
+    src.add_argument("--seq", type=int, default=2048,
+                     help="sequence length for --arch models")
+    ap.add_argument("--cluster", default="8x-rtx-titan-pcie",
+                    help="cluster preset name from repro.core.CLUSTERS")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="override the preset's device count")
+    ap.add_argument("--budget", type=float, default=0.0,
+                    help="single memory budget in GB (one optimize() plan)")
+    ap.add_argument("--budget-sweep", default="",
+                    help='GB list "4,6,8" or ellipsis "8,16,...,80"')
+    ap.add_argument("--quant", type=float, default=0.0,
+                    help="quantization-grid anchor in GB (default: the "
+                         "largest swept budget).  The DP resolves memory in "
+                         "quant/n-bins steps, so a wide sweep quantizes its "
+                         "small budgets coarsely; anchor at the smallest "
+                         "budget for dedicated-search resolution everywhere "
+                         "at higher search cost")
+    ap.add_argument("--parallel", action="store_true",
+                    help="fan (B, P) candidates across a thread pool")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="thread-pool size for --parallel (default: auto)")
+    ap.add_argument("--variant", default="bmw",
+                    help="galvatron_variant search-space preset")
+    ap.add_argument("--batch-grid", default="",
+                    help='comma batch sizes, e.g. "16,32,64"')
+    ap.add_argument("--n-bins", type=int, default=128)
+    ap.add_argument("--micro-candidates", type=int, default=3)
+    ap.add_argument("--max-pp", type=int, default=0)
+    ap.add_argument("--schedules", default="",
+                    help='schedule candidates, e.g. "1f1b,1f1b-interleaved"')
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--out", default="", help="write frontier/plan JSON here")
+    args = ap.parse_args(argv)
+
+    specs, model_name = _specs_for(args)
+    cluster = _cluster_for(args)
+    opt = build_optimizer(specs, cluster, args)
+    if args.quant:
+        opt.cfg.quant_bytes = args.quant * GB
+    print(f"model={model_name} ({len(specs)} layers)  cluster={cluster.name} "
+          f"x{cluster.n_devices}")
+
+    if args.budget_sweep:
+        budgets = parse_budget_sweep(args.budget_sweep)
+        frontier = opt.sweep_budgets(
+            budgets, parallel=args.parallel,
+            max_workers=args.workers or None, verbose=args.verbose)
+        print(frontier.summary())
+        knees = frontier.knee_points()
+        print(f"{len(frontier.feasible_points())}/{len(frontier.points)} "
+              f"budgets feasible, {len(knees)} knee points; "
+              f"search {opt.stats['search_seconds']:.2f}s "
+              f"({opt.stats['stage_cache_hits']:.0f} cache hits / "
+              f"{opt.stats['stage_cache_misses']:.0f} misses)")
+        payload = frontier.dumps()
+    else:
+        # a 1-point sweep is byte-identical to optimize() and honours the
+        # --parallel (B, P) fan-out
+        budget = args.budget * GB if args.budget else cluster.budget()
+        plan = opt.sweep_budgets(
+            [budget], parallel=args.parallel,
+            max_workers=args.workers or None,
+            verbose=args.verbose).points[0].plan
+        if plan is None:
+            print(f"no feasible plan under {budget / GB:.1f} GB", file=sys.stderr)
+            return 1
+        print(f"{budget / GB:7.1f} GB  {plan.est_throughput:10.2f} samples/s  "
+              f"{plan.summary()}")
+        payload = plan.dumps()
+
+    if args.out:
+        pathlib.Path(args.out).write_text(payload + "\n")
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
