@@ -2,13 +2,15 @@
 
 Runs one tiny homogeneous LM on a host-device ``(pipe, data)`` mesh and
 times a full loss+grad step under each compiled schedule — ``gpipe``,
-``1f1b`` (remat tick body) and ``1f1b-interleaved`` (V=2) — and checks
-that all three agree with the non-pipelined executor-path reference loss
-(they run the same math; only the tick program and memory profile
-differ).  On a CPU host the wall-clock ranking mostly reflects the remat
-recompute and the V× hand-off count rather than real bubble savings (no
-parallel stage execution on fake devices); the analytic bubble model the
-search uses is recorded alongside (``bubble_fraction``).
+``1f1b`` (remat tick body), ``1f1b-interleaved`` (V=2) and the
+zero-bubble ``zb-h1`` (three-phase F/B/W table; the runtime executes its
+forward projection) — and checks that all of them agree with the
+non-pipelined executor-path reference loss (they run the same math; only
+the tick program and memory profile differ).  On a CPU host the
+wall-clock ranking mostly reflects the remat recompute and the V×
+hand-off count rather than real bubble savings (no parallel stage
+execution on fake devices); the analytic bubble model the search uses is
+recorded alongside (``bubble_fraction``).
 
 Results land in ``BENCH_pipeline.json`` at the repo root.
 
@@ -66,8 +68,10 @@ def main(argv=None) -> int:
 
     results = {}
     ok = True
-    for sched, V in [("gpipe", 1), ("1f1b", 1), ("1f1b-interleaved", 2)]:
+    for sched, V in [("gpipe", 1), ("1f1b", 1), ("1f1b-interleaved", 2),
+                     ("zb-h1", 1)]:
         prog = compile_schedule(sched, P, m, V if V > 1 else None)
+        exec_prog = prog.forward_program()
         with mesh:
             ps = stage_split_params(params, P, V)
             fn = jax.jit(make_pipeline_loss(cfg, mesh, m, schedule=sched,
@@ -85,14 +89,18 @@ def main(argv=None) -> int:
         results[sched] = {
             "vpp_degree": V,
             "n_ticks": prog.n_ticks,
+            "executed_ticks": exec_prog.n_ticks,
+            "three_phase": bool(prog.is_three_phase),
             "bubble_ticks": prog.bubble_ticks,
-            "bubble_fraction_model": round(bubble_fraction(P, m, V), 4),
+            "bubble_fraction_model": round(
+                bubble_fraction(P, m, V, schedule=sched), 4),
             "step_seconds": round(step_s, 4),
             "compile_seconds": round(compile_s, 2),
             "loss": round(float(loss), 6),
             "matches_reference": bool(match),
         }
-        print(f"{sched:18s} V={V}  ticks={prog.n_ticks:3d}  "
+        print(f"{sched:18s} V={V}  ticks={prog.n_ticks:3d} "
+              f"(exec {exec_prog.n_ticks:3d})  "
               f"{step_s*1e3:8.1f} ms/step  Δref={diff:.2e}")
         if not match:
             print(f"ERROR: {sched} diverged from reference "

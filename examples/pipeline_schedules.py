@@ -1,9 +1,12 @@
-"""Demo: the pluggable pipeline-schedule subsystem (DESIGN.md §5).
+"""Demo: the pluggable pipeline-schedule subsystem (DESIGN.md §5,
+docs/schedules.md).
 
-Runs the same tiny LM under all three compiled schedules — ``gpipe``,
-``1f1b`` and ``1f1b-interleaved`` (V=2) — on a host-device pipe mesh,
-checks they produce identical losses/gradients (they execute the same
-math, only the tick program differs), and prints per-step wall time:
+Runs the same tiny LM under all four compiled schedules — ``gpipe``,
+``1f1b``, ``1f1b-interleaved`` (V=2) and the zero-bubble ``zb-h1``
+(three-phase F/B/W table, executed through its forward projection) — on
+a host-device pipe mesh, checks they produce identical losses/gradients
+(they execute the same math, only the tick program differs), and prints
+per-step wall time:
 
     PYTHONPATH=src python examples/pipeline_schedules.py [--stages 4]
 """
@@ -49,7 +52,8 @@ def main():
     print(f"mesh={dict(mesh.shape)}  layers={cfg.n_layers}  m={m}")
     print(f"reference (non-pipelined executor-path) loss: {ref:.5f}\n")
 
-    for sched, V in [("gpipe", 1), ("1f1b", 1), ("1f1b-interleaved", 2)]:
+    for sched, V in [("gpipe", 1), ("1f1b", 1), ("1f1b-interleaved", 2),
+                     ("zb-h1", 1)]:
         prog = compile_schedule(sched, P, m, V if V > 1 else None)
         with mesh:
             ps = stage_split_params(params, P, V)

@@ -14,10 +14,11 @@ from .layerspec import (LayerSpec, cross_attn_extra, dense_layer, embed_layer,
                         head_layer, merge, moe_layer, ssm_layer, total_params)
 from .optimizer import (GalvatronOptimizer, OptimizerConfig, deepspeed_3d,
                         galvatron_variant, pure_baseline)
-from .pipeline_balance import (balance_degrees, inflight_microbatches,
+from .pipeline_balance import (ZB_W_ACT_FRAC, balance_degrees,
+                               inflight_microbatches,
                                memory_balanced_partition,
-                               time_balanced_partition)
-from .plan import ParallelPlan
+                               time_balanced_partition, zb_w_pending_max)
+from .plan import PLAN_FORMAT_VERSION, ParallelPlan
 from .strategy import (DP, SDP, TP, Strategy, enumerate_strategies,
                        strategy_set_id)
 

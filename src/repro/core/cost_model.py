@@ -35,18 +35,43 @@ from .strategy import DP, SDP, TP, Strategy
 # virtual stages — DESIGN.md §5)
 # --------------------------------------------------------------------------
 
-def bubble_fraction(n_stages: int, n_micro: int, vpp: int = 1) -> float:
-    """Pipeline fill/drain overhead relative to the ideal ``m·V`` chunk
-    ticks: ``(P - 1) / (m · V)``.  ``vpp = 1`` recovers the classic
-    ``(P - 1) / m`` of GPipe / 1F1B-flush; interleaving V virtual chunks
-    per device shrinks the bubble by ``V×``."""
-    return (n_stages - 1) / float(n_micro * vpp)
+def _drain_divisor(vpp: int, schedule: str) -> float:
+    """By how much a schedule shrinks the non-critical drain/bubble term.
+
+    Interleaving splits the drain into ``V×`` smaller chunks; ZB-H1 fills
+    two thirds of the flush bubble with deferred W ticks under the
+    unit-tick assumption ``T_F = T_B = T_W`` (forward : activation-grad :
+    weight-grad = 1 : 1 : 1 — the compiled program's bubble is exactly
+    ``P - 1`` of ``3(P-1)`` 1F1B-equivalent unit ticks, see
+    ``runtime/schedules.py::_compile_zb_h1``)."""
+    return 3.0 * vpp if schedule == "zb-h1" else float(vpp)
+
+
+def bubble_fraction(n_stages: int, n_micro: int, vpp: int = 1,
+                    schedule: str = "1f1b") -> float:
+    """Pipeline fill/drain overhead relative to the ideal per-stage work.
+
+    ``(P - 1) / (m · V)`` for the flush family — ``vpp = 1`` recovers the
+    classic ``(P - 1) / m`` of GPipe / 1F1B; interleaving V virtual
+    chunks per device shrinks the bubble by ``V×``.  ``zb-h1`` fills the
+    remaining bubble with deferred weight-gradient ticks, leaving
+    ``(P - 1) / (3·m)`` — one third of 1F1B's (near zero as ``m`` grows).
+
+    Args:
+      n_stages: pipeline depth ``P``.
+      n_micro: micro-batches per iteration ``m``.
+      vpp: virtual chunks per stage ``V`` (only > 1 for interleaved).
+      schedule: schedule name; only ``"zb-h1"`` changes the formula.
+    """
+    return (n_stages - 1) / (n_micro * _drain_divisor(vpp, schedule))
 
 
 def pipeline_iter_time(stage_times: Sequence[float],
                        stage_times_nosync: Sequence[float],
-                       n_micro: int, vpp: int = 1) -> float:
-    """Eq. 9 generalized over virtual-chunk degree ``V = vpp``.
+                       n_micro: int, vpp: int = 1,
+                       schedule: str = "1f1b") -> float:
+    """Eq. 9 generalized over virtual-chunk degree ``V = vpp`` and the
+    zero-bubble backward split.
 
     ``V = 1``: ``(m-1) · max(C_nosync) + Σ C_sync`` — the slowest stage
     paces the ``m-1`` steady-state micro-batches and the last micro-batch
@@ -58,10 +83,24 @@ def pipeline_iter_time(stage_times: Sequence[float],
     ``(m-1) · max(C_nosync) + max(C_sync) + (Σ C_sync - max(C_sync)) / V``.
     For homogeneous stages of cost ``t`` this is ``m·t + (P-1)·t/V`` —
     exactly the ``(P-1)/(m·V)`` bubble of :func:`bubble_fraction`.
+
+    ``schedule="zb-h1"``: deferred W ticks refill two thirds of the
+    flush drain (unit-tick model), so the non-critical term divides by 3
+    instead — homogeneous stages cost ``m·t + (P-1)·t/3``.
+
+    Args:
+      stage_times: per-stage cost incl. gradient sync (last micro-batch).
+      stage_times_nosync: per-stage cost without DP/SDP gradient sync.
+      n_micro: micro-batches ``m``.
+      vpp: virtual-chunk degree ``V``.
+      schedule: schedule name; only ``"zb-h1"`` changes the formula.
+
+    Returns:
+      Modeled seconds per training iteration.
     """
     mx = max(stage_times)
     return ((n_micro - 1) * max(stage_times_nosync)
-            + mx + (sum(stage_times) - mx) / float(vpp))
+            + mx + (sum(stage_times) - mx) / _drain_divisor(vpp, schedule))
 
 
 @dataclasses.dataclass(frozen=True)

@@ -47,7 +47,7 @@ class OptimizerConfig:
     allow_ckpt: bool = True
     use_pp: bool = True                        # False => PP degree fixed to 1
     bi_objective: bool = True                  # BMW partition refinement
-    schedule: str = "1f1b"                     # or "gpipe" / "1f1b-interleaved"
+    schedule: str = "1f1b"          # or "gpipe" / "1f1b-interleaved" / "zb-h1"
     # pipeline-schedule search axis: candidate schedule names swept per
     # (B, P); None => just (schedule,), the pre-schedule-subsystem behaviour
     schedules: Optional[Sequence[str]] = None
@@ -317,7 +317,10 @@ class GalvatronOptimizer:
         (P·V > L), or has a ragged last micro-batch group (m % P != 0 —
         the compiled program's bubble then exceeds the analytic
         ``(P-1)/(m·V)`` term, so the model would oversell it);
-        single-chunk schedules carry V = 1.
+        ``zb-h1`` is dropped at P == 1 (no bubble to fill — it would
+        only add the deferred-W memory term over plain 1f1b) and when
+        m < P (the compiled program's bubble exceeds the analytic
+        ``(P-1)/(3m)``); single-chunk schedules carry V = 1.
         """
         names = (tuple(self.cfg.schedules) if self.cfg.schedules
                  else (self.cfg.schedule,))
@@ -330,9 +333,12 @@ class GalvatronOptimizer:
                     v = int(v)
                     if v > 1 and P * v <= len(self.specs):
                         out.append((name, v))
+            elif name == "zb-h1":
+                if P > 1 and m >= P:
+                    out.append((name, 1))
             else:
                 out.append((name, 1))
-        if not out:     # interleaved-only request on a degenerate (B, P, m)
+        if not out:     # zb/interleaved-only request on a degenerate (B, P, m)
             out.append(("1f1b", 1))
         return out
 
@@ -394,9 +400,11 @@ class GalvatronOptimizer:
             if not feasible:
                 out.append((INF, ev, all_strats))
                 continue
-            # Eq. 9 (generalized over V): steady state paced by the slowest
-            # no-sync stage; the drain's bubble term shrinks by 1/V
-            out.append((pipeline_iter_time(stage_times, stage_ns, m, vpp),
+            # Eq. 9 (generalized over V and the ZB backward split): steady
+            # state paced by the slowest no-sync stage; the drain's bubble
+            # term shrinks by 1/V (interleaved) or 1/3 (zb-h1 W refill)
+            out.append((pipeline_iter_time(stage_times, stage_ns, m, vpp,
+                                           schedule=schedule),
                         ev, all_strats))
         return out
 
@@ -513,7 +521,16 @@ class GalvatronOptimizer:
         Repeated calls on one instance reuse the memo caches (hit/miss
         telemetry keeps accumulating in ``self.stats`` and is snapshotted
         into the returned plan's ``search_stats``); ``clear_cache()``
-        resets them."""
+        resets them.
+
+        Args:
+          verbose: print every improving (B, P) candidate as it is found.
+
+        Returns:
+          The highest-predicted-throughput :class:`ParallelPlan` under
+          the configured memory budget (``OptimizerConfig.budget_bytes``,
+          default the cluster's), or ``None`` when every candidate OOMs.
+        """
         return self._sweep_axis((self._single_budget(),),
                                 verbose=verbose)[0]
 
@@ -546,6 +563,21 @@ class GalvatronOptimizer:
         write to private shards that are merged back (with their hit/miss
         telemetry) after the pool drains — results are identical to the
         serial sweep, in any interleaving.
+
+        Args:
+          budgets: memory budgets in bytes (deduplicated and sorted).
+          parallel: fan (B, P) candidates over a thread pool.
+          max_workers: pool size for ``parallel`` (default: one per core).
+          verbose: print every improving (B, P, budget) candidate.
+
+        Returns:
+          A :class:`~repro.core.frontier.PlanFrontier` with one
+          (budget, plan, predicted throughput) point per budget —
+          ``plan`` is ``None`` where everything OOMs — plus the
+          quantization grid and aggregated search telemetry.
+
+        Raises:
+          ValueError: ``budgets`` is empty.
         """
         axis = tuple(sorted({float(b) for b in budgets}))
         if not axis:

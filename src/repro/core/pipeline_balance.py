@@ -19,6 +19,29 @@ import numpy as np
 INF = float("inf")
 
 
+# fraction of a full per-micro-batch activation set a deferred W tick
+# retains: the weight gradient needs each layer's *input* activation (and
+# the incoming cotangent), but the activation-gradient chain through the
+# intermediates is already consumed by the B tick — charge half a set
+ZB_W_ACT_FRAC = 0.5
+
+
+def zb_w_pending_max(stage: int, n_stages: int, n_micro: int) -> int:
+    """Deepest completed-B-but-pending-W pile the compiled ZB-H1 program
+    accumulates on (0-indexed) ``stage``: ``max(1, m - P + 1 + i)``.
+
+    W ticks are deferred until a stage has nothing on the critical path
+    (no ready B, no F under the in-flight cap), so deep stages — which run
+    out of F work last — bank the most weight-gradient state.  This is
+    the memory side of the zero-bubble trade: the greedy compiler
+    (``runtime/schedules.py::_compile_zb_h1``) realizes exactly this
+    depth (asserted by ``tests/test_pipeline_schedules.py``), and
+    :func:`inflight_microbatches` charges :data:`ZB_W_ACT_FRAC` of an
+    activation set per pending W using the same formula — one definition,
+    priced and executed."""
+    return max(1, n_micro - n_stages + 1 + stage)
+
+
 def inflight_microbatches(stage: int, n_stages: int, n_micro: int,
                           schedule: str = "1f1b", vpp: int = 1) -> float:
     """In-flight micro-batch activation sets on one stage, in units of the
@@ -34,9 +57,19 @@ def inflight_microbatches(stage: int, n_stages: int, n_micro: int,
       chunks that exist.  Each chunk's activations are ``1/V`` of the
       stage's, so the per-chunk count divides by ``V`` — fractional
       full-stage units (the per-chunk accounting of DESIGN.md §5).
+    * ``zb-h1``: the forward stash keeps the 1F1B profile
+      (``min(P - i, m)`` — the compiler enforces the same in-flight cap),
+      but every deferred weight-gradient tick banks
+      :data:`ZB_W_ACT_FRAC` of a set until it runs; the compiled
+      deferral depth is :func:`zb_w_pending_max`.  This is the memory
+      price of the near-zero bubble — strictly above 1F1B on every
+      stage, approaching it as ``m`` shrinks toward ``P``.
     """
     if schedule == "gpipe":
         return n_micro
+    if schedule == "zb-h1":
+        return (min(n_stages - stage, n_micro)
+                + ZB_W_ACT_FRAC * zb_w_pending_max(stage, n_stages, n_micro))
     if schedule == "1f1b-interleaved" and vpp > 1:
         chunks = min(2 * (n_stages - stage - 1) + (vpp - 1) * n_stages + 1,
                      n_micro * vpp)

@@ -1,5 +1,16 @@
 """Serializable parallelism plan — the output of the Galvatron-BMW search
-and the input of the execution runtime."""
+and the input of the execution runtime.
+
+JSON format versioning (full schema + compat table: docs/plan-format.md):
+
+  * v0 (PR 1) — no ``vpp_degree`` key; ``schedule`` may be absent too.
+  * v1 (PR 2) — ``schedule`` + ``vpp_degree`` always present.
+  * v2 (PR 5) — ``format_version`` stamp; ``schedule`` may be ``"zb-h1"``.
+
+``from_json`` reads every older version (missing keys default to the
+value that version implied: ``schedule="1f1b"``, ``vpp_degree=1``);
+``to_json`` always writes the current version.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -7,6 +18,9 @@ import json
 from typing import Dict, List, Optional
 
 from .strategy import Strategy
+
+#: version stamp written by :meth:`ParallelPlan.to_json` (see module doc)
+PLAN_FORMAT_VERSION = 2
 
 
 @dataclasses.dataclass
@@ -76,6 +90,7 @@ class ParallelPlan:
     # ---- (de)serialization ----------------------------------------------
     def to_json(self) -> Dict:
         return {
+            "format_version": PLAN_FORMAT_VERSION,
             "n_devices": self.n_devices,
             "pp_degree": self.pp_degree,
             "partition": self.partition,

@@ -83,6 +83,19 @@ def _cluster_for(args):
 
 
 def build_optimizer(specs, cluster, args) -> GalvatronOptimizer:
+    """Construct the search engine from parsed CLI args.
+
+    Args:
+      specs: per-layer :class:`~repro.core.layerspec.LayerSpec` workload.
+      cluster: the :class:`~repro.core.hardware.ClusterSpec` to plan for.
+      args: the parsed ``argparse`` namespace (see ``--help``).
+
+    Returns:
+      A configured :class:`~repro.core.GalvatronOptimizer`.
+
+    Raises:
+      ValueError: unknown ``--variant`` preset.
+    """
     ocfg = galvatron_variant(args.variant)
     if args.batch_grid:
         ocfg.batch_grid = [int(b) for b in args.batch_grid.split(",")]
@@ -96,6 +109,15 @@ def build_optimizer(specs, cluster, args) -> GalvatronOptimizer:
 
 
 def main(argv=None) -> int:
+    """CLI entry point (see module docstring and ``--help``).
+
+    Args:
+      argv: argument list (default: ``sys.argv[1:]``).
+
+    Returns:
+      Process exit code — 0 on success, 1 when no feasible plan exists
+      under a single ``--budget``.
+    """
     ap = argparse.ArgumentParser(
         description=__doc__, formatter_class=argparse.RawDescriptionHelpFormatter)
     src = ap.add_argument_group("model")
@@ -123,15 +145,27 @@ def main(argv=None) -> int:
     ap.add_argument("--workers", type=int, default=0,
                     help="thread-pool size for --parallel (default: auto)")
     ap.add_argument("--variant", default="bmw",
-                    help="galvatron_variant search-space preset")
+                    help="galvatron_variant search-space preset: dp+tp / "
+                         "dp+pp / galvatron / base / 1f1b-biobj / bmw")
     ap.add_argument("--batch-grid", default="",
-                    help='comma batch sizes, e.g. "16,32,64"')
-    ap.add_argument("--n-bins", type=int, default=128)
-    ap.add_argument("--micro-candidates", type=int, default=3)
-    ap.add_argument("--max-pp", type=int, default=0)
+                    help='comma global-batch sizes to sweep, e.g. "16,32,64" '
+                         "(default: the geometric+linear Alg. 1 grid)")
+    ap.add_argument("--n-bins", type=int, default=128,
+                    help="DP memory-quantization bins (more = finer plans, "
+                         "slower search)")
+    ap.add_argument("--micro-candidates", type=int, default=3,
+                    help="micro-batch counts tried per (B, P), doubling "
+                         "from P")
+    ap.add_argument("--max-pp", type=int, default=0,
+                    help="cap the searched pipeline degree (0 = no cap)")
     ap.add_argument("--schedules", default="",
-                    help='schedule candidates, e.g. "1f1b,1f1b-interleaved"')
-    ap.add_argument("--verbose", action="store_true")
+                    help="comma list of pipeline-schedule candidates the "
+                         "search sweeps per (B, P): any of gpipe, 1f1b, "
+                         "1f1b-interleaved, zb-h1 "
+                         '(e.g. "1f1b,1f1b-interleaved,zb-h1"; '
+                         "default: the variant's single schedule)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every improving (B, P, budget) candidate")
     ap.add_argument("--out", default="", help="write frontier/plan JSON here")
     args = ap.parse_args(argv)
 

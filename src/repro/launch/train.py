@@ -36,9 +36,10 @@ def search_plan(cfg, seq_len: int, n_devices: int = 64) -> ParallelPlan:
     ocfg.n_bins = 96
     ocfg.micro_candidates = 2
     ocfg.max_pp = 4
-    # the schedule is a searched dimension (DESIGN.md §5): plain 1F1B vs
-    # interleaved virtual stages, trading bubble for hand-off traffic
-    ocfg.schedules = ("1f1b", "1f1b-interleaved")
+    # the schedule is a searched dimension (DESIGN.md §5, docs/schedules.md):
+    # plain 1F1B vs interleaved virtual stages (bubble for hand-off traffic)
+    # vs zero-bubble ZB-H1 (bubble for deferred weight-grad memory)
+    ocfg.schedules = ("1f1b", "1f1b-interleaved", "zb-h1")
     ocfg.vpp_candidates = (2,)
     plan = GalvatronOptimizer(specs, tpu_v5e_pod(n_devices), ocfg).optimize()
     if plan is None:

@@ -5,13 +5,16 @@ with data parallelism on a ``data`` axis.
 Takeaway #1 maps this axis onto the slowest interconnect — across pods in
 the production mesh.
 
-The *schedule* is pluggable (DESIGN.md §5): ``runtime/schedules.py``
-compiles a named schedule (``gpipe`` / ``1f1b`` / ``1f1b-interleaved``)
-into per-tick program tables — (micro-batch, virtual chunk, validity,
-loss) per (tick, stage) — and this module executes whatever program it is
-handed with one generic ``lax.scan`` tick loop.  Params are split into
-``P × V`` virtual chunks (``stage_split_params``); the interleaved
-schedule walks each device through its ``V`` chunks per micro-batch group.
+The *schedule* is pluggable (DESIGN.md §5, docs/schedules.md):
+``runtime/schedules.py`` compiles a named schedule (``gpipe`` / ``1f1b``
+/ ``1f1b-interleaved`` / ``zb-h1``) into per-tick program tables —
+(micro-batch, virtual chunk, validity, loss, phase) per (tick, stage) —
+and this module executes whatever program it is handed with one generic
+``lax.scan`` tick loop (three-phase zero-bubble tables run through their
+forward projection; see ``make_pipeline_loss_from_program``).  Params are
+split into ``P × V`` virtual chunks (``stage_split_params``); the
+interleaved schedule walks each device through its ``V`` chunks per
+micro-batch group.
 
 Hand-off / compute overlap: each tick *first* issues the ring ``ppermute``
 on the previous tick's output, *then* runs the stage body — the two have
@@ -113,7 +116,17 @@ def make_pipeline_loss(cfg: ModelConfig, mesh: Mesh, n_micro: int,
 
 def make_pipeline_loss_from_program(cfg: ModelConfig, mesh: Mesh,
                                     prog: ScheduleProgram):
-    """Generic tick-loop executor for any compiled :class:`ScheduleProgram`."""
+    """Generic tick-loop executor for any compiled :class:`ScheduleProgram`.
+
+    Three-phase (zero-bubble) programs are executed through their
+    :meth:`~repro.runtime.schedules.ScheduleProgram.forward_program`: the
+    scan replays the F ticks on the dense flush diagonal, autodiff of the
+    rematerialized tick body realizes the B ticks, and XLA's backward
+    placement realizes the deferred W ticks.  The three-phase table's
+    tick *timing* is the analytic object the cost model prices
+    (``docs/schedules.md``).
+    """
+    prog = prog.forward_program()
     n_stages = mesh.shape["pipe"]
     assert prog.n_stages == n_stages, (prog.n_stages, n_stages)
     m, V, T = prog.n_micro, prog.n_chunks, prog.n_ticks

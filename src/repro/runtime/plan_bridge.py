@@ -63,7 +63,11 @@ def policy_from_plan(cfg: ModelConfig, plan: ParallelPlan, *,
 
 def schedule_program_from_plan(plan: ParallelPlan) -> ScheduleProgram:
     """Compile the plan's searched (schedule, pp_degree, n_micro,
-    vpp_degree) into the tick program the pipeline runtime executes."""
+    vpp_degree) into the tick program the pipeline runtime executes.
+
+    Three-phase plans (``schedule="zb-h1"``) compile to the full F/B/W
+    table; the executor runs its forward projection (see
+    ``runtime/pipeline.py::make_pipeline_loss_from_program``)."""
     return compile_schedule(plan.schedule, plan.pp_degree, plan.n_micro,
                             plan.vpp_degree)
 

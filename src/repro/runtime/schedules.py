@@ -21,6 +21,21 @@ Supported schedules:
     ``v``.  Micro-batches advance in groups of ``P``, shrinking the
     pipeline bubble from ``(P-1)/m`` to ``(P-1)/(m·V)`` at the price of
     ``V×`` hand-off traffic and deeper warm-up queues.
+  * ``zb-h1``             — zero-bubble (handcrafted schedule 1, after
+    Qi et al., "Zero Bubble Pipeline Parallelism"): the backward pass is
+    split into a **B** tick (activation gradient, on the critical path to
+    the upstream stage) and a **W** tick (weight gradient, no inter-stage
+    dependency).  W ticks are *deferred* and spent filling what would be
+    the 1F1B bubble, shrinking it from ``3(P-1)`` to exactly ``P-1``
+    unit ticks (the unavoidable warm-up fill) at the price of the
+    deferred weight-gradient activation stash — up to
+    ``max(1, m - P + 1 + i)`` pending W sets on stage ``i``
+    (``docs/schedules.md``).  Compiled as a genuine three-phase table by
+    a greedy event simulation (:func:`_compile_zb_h1`); the runtime
+    executes its *forward projection*
+    (:meth:`ScheduleProgram.forward_program`) — the B ticks are realized
+    by autodiff of the rematerialized scan, the W ticks by the
+    weight-gradient work XLA schedules in the backward.
 
 Tick mapping (one formula covers all three; ``V = 1`` recovers GPipe/1F1B):
 virtual stage ``s = v·P + i`` processes micro-batch ``mb = g·P + r``
@@ -43,7 +58,16 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-SCHEDULE_NAMES: Tuple[str, ...] = ("gpipe", "1f1b", "1f1b-interleaved")
+# single source of truth for the ZB-H1 deferred-W depth: the cost model
+# prices it and the greedy compiler below realizes it (re-exported here
+# because schedule consumers are runtime-side)
+from repro.core.pipeline_balance import zb_w_pending_max  # noqa: F401
+
+SCHEDULE_NAMES: Tuple[str, ...] = ("gpipe", "1f1b", "1f1b-interleaved",
+                                   "zb-h1")
+
+# phase codes for three-phase (zero-bubble) program tables
+PHASE_F, PHASE_B, PHASE_W = 0, 1, 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,20 +84,77 @@ class ScheduleProgram:
     chunk_index: np.ndarray  # (T, P) int32 in [0, V) — local virtual chunk
     valid: np.ndarray        # (T, P) bool — real work (False = bubble slot)
     loss_valid: np.ndarray   # (T, P) bool — tick finishes virtual stage P·V-1
+    # (T, P) int8 ∈ {PHASE_F, PHASE_B, PHASE_W}, meaningful where ``valid``.
+    # Single-phase schedules (gpipe / 1f1b / interleaved) are all-F; only
+    # ``zb-h1`` compiles genuine B/W ticks.  ``None`` normalizes to all-F.
+    phase: Optional[np.ndarray] = None
+
+    @property
+    def is_three_phase(self) -> bool:
+        """True when the table carries split-backward (B/W) ticks."""
+        return bool((self.phase > PHASE_F).any())
+
+    @property
+    def work_ticks_per_stage(self) -> int:
+        """Busy ticks a fully-loaded stage runs: ``m·V`` chunk ticks for
+        single-phase schedules, ``3·m·V`` (one F, one B, one W per
+        micro-batch chunk) for three-phase tables."""
+        return self.n_micro * self.n_chunks * (3 if self.is_three_phase else 1)
 
     @property
     def bubble_ticks(self) -> int:
-        """Fill+drain ticks beyond the ideal ``m·V``.
+        """Fill+drain ticks beyond the ideal :attr:`work_ticks_per_stage`.
 
-        ``P - 1`` for single-chunk schedules and for interleaved programs
-        with full micro-batch groups (``m % P == 0``).  A ragged last
-        group (``m % P != 0``) leaves extra idle slots, so the optimizer
-        only proposes interleaving when ``m`` divides evenly (the analytic
-        ``(P-1)/(m·V)`` bubble would otherwise understate this program)."""
-        return self.n_ticks - self.n_micro * self.n_chunks
+        ``P - 1`` for single-chunk single-phase schedules and for
+        interleaved programs with full micro-batch groups (``m % P == 0``).
+        A ragged last group (``m % P != 0``) leaves extra idle slots, so
+        the optimizer only proposes interleaving when ``m`` divides evenly
+        (the analytic ``(P-1)/(m·V)`` bubble would otherwise understate
+        this program).  For ``zb-h1`` the deferred W ticks refill most of
+        the drain: the compiled bubble sits near ``P - 1`` three-phase
+        unit ticks versus 1F1B's ``3(P-1)`` equivalent."""
+        return self.n_ticks - self.work_ticks_per_stage
+
+    @property
+    def f_valid(self) -> np.ndarray:
+        """(T, P) bool — slots that run the *forward* stage body."""
+        return self.valid & (self.phase == PHASE_F)
+
+    def forward_program(self) -> "ScheduleProgram":
+        """The forward projection executed by ``runtime/pipeline.py``.
+
+        Single-phase programs are their own forward projection.  For
+        three-phase tables, every stage's F slots process micro-batches
+        ``0..m-1`` in order (asserted), so the densest forward execution
+        is the classic flush diagonal — the same table ``1f1b`` compiles,
+        under which every hand-off producer sits exactly one tick and one
+        ring hop upstream of its consumer (the single-carry ``ppermute``
+        invariant).  The B ticks are realized by autodiff of the
+        rematerialized scan and the W ticks by the weight-gradient
+        computations XLA places in the backward; their *timing* (what the
+        deferred W slots buy on real parallel hardware) is exactly what
+        the three-phase table models for the cost model.
+
+        Returns:
+          A single-phase :class:`ScheduleProgram` with this program's
+          name, ``remat`` and (P, V, m), safe for the generic tick loop.
+        """
+        if not self.is_three_phase:
+            return self
+        for i in range(self.n_stages):
+            mbs = self.mb_index[self.f_valid[:, i], i]
+            assert (mbs == np.arange(self.n_micro)).all(), (
+                "three-phase program's F slots are not in flush order; "
+                "no dense forward projection exists")
+        diag = compile_schedule("1f1b", self.n_stages, self.n_micro)
+        return dataclasses.replace(diag, name=self.name, remat=self.remat)
 
     def __post_init__(self):
-        for f in ("mb_index", "chunk_index", "valid", "loss_valid"):
+        if self.phase is None:
+            object.__setattr__(
+                self, "phase",
+                np.zeros((self.n_ticks, self.n_stages), np.int8))
+        for f in ("mb_index", "chunk_index", "valid", "loss_valid", "phase"):
             assert getattr(self, f).shape == (self.n_ticks, self.n_stages), f
 
 
@@ -81,8 +162,22 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
                      n_chunks: Optional[int] = None) -> ScheduleProgram:
     """Compile ``name`` into a :class:`ScheduleProgram`.
 
-    ``n_chunks`` (V) is only meaningful for ``1f1b-interleaved`` (default 2
-    there); ``gpipe``/``1f1b`` are single-chunk schedules and reject V > 1.
+    Args:
+      name: one of :data:`SCHEDULE_NAMES` (``gpipe`` / ``1f1b`` /
+        ``1f1b-interleaved`` / ``zb-h1``).
+      n_stages: ``P`` — pipeline stages (size of the mesh ``pipe`` axis).
+      n_micro: ``m`` — micro-batches per iteration.
+      n_chunks: ``V`` — virtual chunks per stage.  Only meaningful for
+        ``1f1b-interleaved`` (default 2 there, must be >= 2); every other
+        schedule is single-chunk and rejects V > 1.
+
+    Returns:
+      The compiled :class:`ScheduleProgram` — per-tick ``(T, P)`` tables
+      the generic ``runtime/pipeline.py`` scan loop replays.
+
+    Raises:
+      ValueError: unknown ``name``, non-positive ``n_stages`` /
+        ``n_micro``, or an ``n_chunks`` the schedule cannot use.
     """
     if name not in SCHEDULE_NAMES:
         raise ValueError(f"unknown schedule {name!r}; "
@@ -91,6 +186,11 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
         raise ValueError(f"n_stages must be >= 1, got {n_stages}")
     if n_micro < 1:
         raise ValueError(f"n_micro must be >= 1, got {n_micro}")
+    if name == "zb-h1":
+        if n_chunks is not None and int(n_chunks) != 1:
+            raise ValueError(f"schedule 'zb-h1' is single-chunk; "
+                             f"got n_chunks={n_chunks}")
+        return _compile_zb_h1(int(n_stages), int(n_micro))
     if name == "1f1b-interleaved":
         V = 2 if n_chunks is None else int(n_chunks)
         if V < 2:
@@ -128,3 +228,92 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
         valid=valid,
         loss_valid=loss_valid,
     )
+
+
+def _compile_zb_h1(P: int, m: int) -> ScheduleProgram:
+    """Greedy event simulation of the ZB-H1 zero-bubble schedule.
+
+    Unit-tick model (``T_F = T_B = T_W``, the handcrafted-schedule
+    assumption): each stage picks one action per tick —
+
+      1. the oldest *ready* B (activation gradient; its F is done and the
+         downstream stage's B for the same micro-batch has arrived),
+      2. else the oldest ready F, subject to the 1F1B in-flight cap
+         ``min(P - i, m)`` (the forward-activation stash never exceeds
+         the 1F1B-flush profile),
+      3. else a deferred W (weight gradient — always runnable once its B
+         is done, never on the inter-stage critical path),
+      4. else bubble.
+
+    All stages decide simultaneously from the previous ticks' state, so
+    every dependency is satisfied strictly earlier than its consumer.
+    Deferring W maximally lets the banked W ticks fill every drain stall,
+    so the compiled program runs in ``3m + P - 1`` unit ticks for
+    ``m >= P`` — bubble exactly ``P - 1``, a third of 1F1B's ``3(P-1)``
+    equivalent — at the price of :func:`zb_w_pending_max` deferred
+    weight-gradient sets per stage.
+    """
+    NONE = -1
+    f_tick = np.full((P, m), NONE, np.int64)
+    b_tick = np.full((P, m), NONE, np.int64)
+    w_tick = np.full((P, m), NONE, np.int64)
+    f_done = [0] * P
+    b_done = [0] * P
+    w_done = [0] * P
+    rows = []                                   # per tick: [(phase, mb)|None]
+    limit = 4 * m + 4 * P + 8                   # safety stop (never hit)
+    t = 0
+    while min(w_done) < m and t < limit:
+        acts = []
+        for i in range(P):
+            act = None
+            j = b_done[i]
+            b_ready = (j < m and 0 <= f_tick[i, j] < t
+                       and (i == P - 1 or 0 <= b_tick[i + 1, j] < t))
+            k = f_done[i]
+            f_ready = (k < m
+                       and (i == 0 or 0 <= f_tick[i - 1, k] < t)
+                       # 1F1B warm-up / in-flight cap
+                       and f_done[i] - b_done[i] < min(P - i, m))
+            if b_ready:
+                act = (PHASE_B, j)
+            elif f_ready:
+                act = (PHASE_F, k)
+            elif b_done[i] - w_done[i] > 0:
+                act = (PHASE_W, w_done[i])
+            acts.append(act)
+        for i, act in enumerate(acts):          # commit simultaneously
+            if act is None:
+                continue
+            phase, mb = act
+            (f_tick, b_tick, w_tick)[phase][i, mb] = t
+            if phase == PHASE_F:
+                f_done[i] += 1
+            elif phase == PHASE_B:
+                b_done[i] += 1
+            else:
+                w_done[i] += 1
+        rows.append(acts)
+        t += 1
+    assert min(w_done) == m, "zb-h1 simulation did not converge"
+
+    T = len(rows)
+    mb_index = np.zeros((T, P), np.int32)
+    chunk_index = np.zeros((T, P), np.int32)
+    valid = np.zeros((T, P), bool)
+    phase = np.zeros((T, P), np.int8)
+    for tt, acts in enumerate(rows):
+        for i, act in enumerate(acts):
+            if act is None:
+                continue
+            phase[tt, i] = act[0]
+            mb_index[tt, i] = act[1]
+            valid[tt, i] = True
+    # the executed forward finishes a micro-batch (head + loss) at its
+    # last-stage F tick; the B tick on that slot is the loss backward
+    loss_valid = valid & (phase == PHASE_F)
+    loss_valid[:, :P - 1] = False
+    return ScheduleProgram(
+        name="zb-h1", n_stages=P, n_chunks=1, n_micro=m, n_ticks=T,
+        remat=True, mb_index=mb_index, chunk_index=chunk_index,
+        valid=valid, loss_valid=loss_valid, phase=phase)

@@ -167,8 +167,10 @@ print("OK")
 
 @pytest.mark.slow
 def test_pipeline_all_schedules_match_reference_8dev():
-    """Schedule-equivalence: gpipe / 1f1b / 1f1b-interleaved (V=2) all
-    reproduce the non-pipelined executor-path loss and gradients."""
+    """Schedule-equivalence: gpipe / 1f1b / 1f1b-interleaved (V=2) /
+    zb-h1 all reproduce the non-pipelined executor-path loss and
+    gradients (the zero-bubble program executes its forward projection;
+    autodiff realizes the B/W split)."""
     out = run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np
 mesh = jax.make_mesh((4, 2), ("pipe", "data"))
@@ -187,7 +189,8 @@ ref = lm_loss(params, flat, cfg)
 rg = jax.grad(lambda p: lm_loss(p, flat, cfg))(params)
 rs = np.asarray(rg["stacks"][0]["attn"]["wq"], np.float32)
 with mesh:
-    for sched, V in [("gpipe", 1), ("1f1b", 1), ("1f1b-interleaved", 2)]:
+    for sched, V in [("gpipe", 1), ("1f1b", 1), ("1f1b-interleaved", 2),
+                     ("zb-h1", 1)]:
         ps = stage_split_params(params, 4, V)
         loss_fn = make_pipeline_loss(cfg, mesh, n_micro=m, schedule=sched,
                                      n_chunks=V)

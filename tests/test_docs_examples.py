@@ -1,0 +1,88 @@
+"""Docs cannot rot: every fenced ``python`` block in ``docs/*.md`` is
+extracted and executed, and every relative link in ``docs/**/*.md`` and
+``README.md`` must resolve to a real file.
+
+Rules for doc authors:
+  * blocks tagged exactly ```` ```python ```` are executed in a fresh
+    namespace (same process — keep them self-contained and fast, pure
+    ``repro.core`` / ``runtime.schedules`` where possible);
+  * use ```` ```bash ```` / ```` ```text ```` for illustrative snippets
+    that must not run;
+  * relative links may point at files or directories anywhere in the
+    repo; ``#anchors`` and absolute URLs are not checked.
+"""
+import pathlib
+import re
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DOCS = sorted((REPO / "docs").glob("**/*.md"))
+LINKED_MD = DOCS + [REPO / "README.md"]
+
+_FENCE = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+# [text](target) — skip absolute URLs and pure anchors
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _python_blocks():
+    out = []
+    for path in DOCS:
+        for i, block in enumerate(_FENCE.findall(path.read_text())):
+            out.append(pytest.param(
+                path, block, id=f"{path.name}-block{i}"))
+    return out
+
+
+def test_docs_exist_and_have_examples():
+    names = {p.name for p in DOCS}
+    assert {"architecture.md", "search.md", "schedules.md",
+            "plan-format.md"} <= names
+    assert _python_blocks(), "docs/ lost all executable examples"
+
+
+@pytest.mark.parametrize("path,block", _python_blocks())
+def test_docs_python_examples_execute(path, block):
+    code = compile(block, f"{path.name}:example", "exec")
+    exec(code, {"__name__": f"docs_example_{path.stem}"})
+
+
+def test_docs_search_cli_help_embed_is_current(monkeypatch, capsys):
+    """docs/search.md embeds the CLI's usage + options sections; regenerate
+    them from the live parser (at the same 80-column wrap) and require a
+    byte match, so a flag rename/re-help can't leave the doc stale."""
+    import sys
+
+    from repro.launch import search as search_cli
+
+    monkeypatch.setenv("COLUMNS", "80")
+    # argparse derives prog (and hence usage-block wrapping) from argv[0]
+    monkeypatch.setattr(sys, "argv", ["search.py"])
+    with pytest.raises(SystemExit):
+        search_cli.main(["--help"])
+    help_text = capsys.readouterr().out
+    lines = help_text.splitlines()
+    usage = "\n".join(lines[:lines.index("")])
+    options = help_text[help_text.index("options:"):].rstrip("\n")
+    expected = usage + "\n\n" + options + "\n"
+    doc = (REPO / "docs" / "search.md").read_text()
+    m = re.search(r"```text\n(usage: search\.py.*?)```\n", doc, re.S)
+    assert m, "docs/search.md lost its embedded --help block"
+    assert m.group(1) == expected, (
+        "docs/search.md --help embed is stale; regenerate with "
+        "COLUMNS=80 python -m repro.launch.search --help")
+
+
+@pytest.mark.parametrize("path", LINKED_MD, ids=lambda p: p.name)
+def test_docs_relative_links_resolve(path):
+    assert path.exists(), path
+    broken = []
+    for target in _LINK.findall(path.read_text()):
+        if re.match(r"^[a-z][a-z0-9+.-]*:", target) or target.startswith("#"):
+            continue                      # absolute URL / in-page anchor
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (path.parent / rel).resolve().exists():
+            broken.append(target)
+    assert not broken, f"broken relative links in {path}: {broken}"

@@ -7,8 +7,9 @@ with fake devices)."""
 import numpy as np
 import pytest
 
-from repro.runtime.schedules import (SCHEDULE_NAMES, ScheduleProgram,
-                                     compile_schedule)
+from repro.runtime.schedules import (PHASE_B, PHASE_F, PHASE_W,
+                                     SCHEDULE_NAMES, ScheduleProgram,
+                                     compile_schedule, zb_w_pending_max)
 
 
 # ---------------------------------------------------------------------------
@@ -99,7 +100,98 @@ def test_bad_args_raise():
         compile_schedule("1f1b-interleaved", 4, 8, 1)    # that's plain 1f1b
     with pytest.raises(ValueError):
         compile_schedule("gpipe", 4, 0)
-    assert set(SCHEDULE_NAMES) == {"gpipe", "1f1b", "1f1b-interleaved"}
+    with pytest.raises(ValueError):
+        compile_schedule("zb-h1", 4, 8, n_chunks=2)      # single-chunk
+    assert set(SCHEDULE_NAMES) == {"gpipe", "1f1b", "1f1b-interleaved",
+                                   "zb-h1"}
+
+
+# ---------------------------------------------------------------------------
+# zero-bubble (ZB-H1) three-phase tables
+# ---------------------------------------------------------------------------
+
+def _zb_phase_ticks(pr):
+    """(f, b, w) tick matrices shaped (P, m) from a three-phase table."""
+    P, m = pr.n_stages, pr.n_micro
+    ticks = {ph: np.full((P, m), -1, np.int64)
+             for ph in (PHASE_F, PHASE_B, PHASE_W)}
+    for t in range(pr.n_ticks):
+        for i in range(P):
+            if pr.valid[t, i]:
+                ticks[int(pr.phase[t, i])][i, int(pr.mb_index[t, i])] = t
+    return ticks[PHASE_F], ticks[PHASE_B], ticks[PHASE_W]
+
+
+def _max_overlap(starts, ends):
+    """Peak number of [start, end) intervals alive at once."""
+    ev = sorted([(t, 1) for t in starts] + [(t, -1) for t in ends])
+    c = mx = 0
+    for _, d in ev:
+        c += d
+        mx = max(mx, c)
+    return mx
+
+
+@pytest.mark.parametrize("P,m", [(1, 4), (2, 2), (2, 8), (3, 5), (4, 8),
+                                 (8, 8), (8, 32)])
+def test_zb_h1_three_phase_dependencies_and_coverage(P, m):
+    """Every (stage, micro-batch) runs exactly one F, one B and one W, in
+    dependency order: F follows the upstream F, B follows this stage's F
+    and the downstream B, W follows this stage's B."""
+    pr = compile_schedule("zb-h1", P, m)
+    assert pr.is_three_phase and pr.remat and pr.n_chunks == 1
+    ft, bt, wt = _zb_phase_ticks(pr)
+    assert (ft >= 0).all() and (bt >= 0).all() and (wt >= 0).all()
+    for i in range(P):
+        for mb in range(m):
+            if i > 0:
+                assert ft[i, mb] > ft[i - 1, mb]
+            assert bt[i, mb] > ft[i, mb]
+            if i < P - 1:
+                assert bt[i, mb] > bt[i + 1, mb]
+            assert wt[i, mb] > bt[i, mb]
+    # loss once per micro-batch, on the last stage's F slot
+    assert pr.loss_valid[:, :P - 1].sum() == 0
+    assert pr.loss_valid.sum() == m
+
+
+@pytest.mark.parametrize("P,m", [(2, 8), (4, 4), (4, 16), (8, 8)])
+def test_zb_h1_memory_profile(P, m):
+    """The forward-activation stash never exceeds the 1F1B profile
+    (min(P-i, m) in flight), and the deferred weight-grad pile matches
+    zb_w_pending_max exactly — the modeled memory price of the W split."""
+    pr = compile_schedule("zb-h1", P, m)
+    ft, bt, wt = _zb_phase_ticks(pr)
+    for i in range(P):
+        assert _max_overlap(ft[i], bt[i]) <= min(P - i, m)
+        assert _max_overlap(bt[i], wt[i]) == zb_w_pending_max(i, P, m)
+
+
+@pytest.mark.parametrize("P,m", [(1, 4), (2, 2), (2, 8), (4, 8), (4, 16),
+                                 (8, 8), (8, 32)])
+def test_zb_h1_bubble_is_one_third_of_1f1b(P, m):
+    """m >= P: the compiled bubble is exactly P-1 three-phase unit ticks —
+    one third of 1F1B's 3(P-1) equivalent (only the warm-up fill remains;
+    deferred W ticks absorb the rest)."""
+    pr = compile_schedule("zb-h1", P, m)
+    assert pr.work_ticks_per_stage == 3 * m
+    assert pr.n_ticks == 3 * m + (P - 1)
+    assert pr.bubble_ticks == P - 1
+    assert pr.bubble_ticks <= 3 * (P - 1)     # 1f1b-equivalent unit bubble
+
+
+def test_zb_h1_forward_program_is_the_flush_diagonal():
+    P, m = 4, 8
+    pr = compile_schedule("zb-h1", P, m)
+    fwd = pr.forward_program()
+    ref = compile_schedule("1f1b", P, m)
+    assert (fwd.name, fwd.remat, fwd.is_three_phase) == ("zb-h1", True, False)
+    assert fwd.n_ticks == m + P - 1
+    np.testing.assert_array_equal(fwd.mb_index, ref.mb_index)
+    np.testing.assert_array_equal(fwd.valid, ref.valid)
+    np.testing.assert_array_equal(fwd.loss_valid, ref.loss_valid)
+    # single-phase programs are their own projection
+    assert ref.forward_program() is ref
 
 
 # ---------------------------------------------------------------------------
@@ -127,7 +219,7 @@ def test_single_stage_interleaved_matches_reference():
     ref = float(lm_loss(params, flat, cfg))
     rg = jax.grad(lambda p: lm_loss(p, flat, cfg))(params)
     with mesh:
-        for sched, V in [("gpipe", 1), ("1f1b-interleaved", 2)]:
+        for sched, V in [("gpipe", 1), ("1f1b-interleaved", 2), ("zb-h1", 1)]:
             ps = stage_split_params(params, 1, V)
             loss, grads = jax.jit(make_pipeline_loss(
                 cfg, mesh, m, schedule=sched, n_chunks=V))(ps, batch)

@@ -40,6 +40,22 @@ def test_backward_compat_pr1_json_defaults_vpp_to_1():
     assert ParallelPlan.from_json(json.loads(json.dumps(d))).schedule == "1f1b"
 
 
+def test_v2_format_version_stamp_and_zb_h1_roundtrip():
+    from repro.core import PLAN_FORMAT_VERSION
+
+    plan = _plan(schedule="zb-h1")
+    d = plan.to_json()
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 2
+    plan2 = ParallelPlan.loads(plan.dumps())
+    assert plan2 == plan and plan2.schedule == "zb-h1"
+    # v0/v1 readers' keys are all still present (additive evolution only)
+    for key in ("n_devices", "pp_degree", "partition", "strategies",
+                "global_batch", "n_micro", "schedule", "vpp_degree"):
+        assert key in d, key
+    # the canonical byte-oracle includes the stamp on both sides
+    assert json.loads(plan.canonical_dumps())["format_version"] == 2
+
+
 def test_search_stats_excluded_from_equality():
     a = _plan()
     b = _plan()

@@ -103,3 +103,72 @@ def test_interleaved_inflight_memory_exceeds_plain_1f1b_deep_stages():
         plain = inflight_microbatches(i, P, m, "1f1b")
         inter = inflight_microbatches(i, P, m, "1f1b-interleaved", vpp=2)
         assert inter >= plain - 1e-12, i
+
+
+# ---------------------------------------------------------------------------
+# zero-bubble (ZB-H1) on the search axis
+# ---------------------------------------------------------------------------
+
+def test_zb_h1_selected_when_bubble_dominates():
+    # small m (= P = 8): the (P-1)/m bubble dominates and zb-h1 cuts it to
+    # a third — the search must find that when memory allows
+    base = _search(("1f1b",), budget_gb=8)
+    both = _search(("1f1b", "zb-h1"), budget_gb=8)
+    assert base is not None and both is not None
+    assert both.schedule == "zb-h1"
+    assert both.vpp_degree == 1
+    assert both.est_iter_time < base.est_iter_time
+
+
+def test_zb_h1_modeled_bubble_leq_1f1b_everywhere():
+    # ISSUE acceptance: modeled bubble fraction <= 1f1b's at equal (P, m, V)
+    for P in (2, 4, 8):
+        for m in (P, 2 * P, 8 * P):
+            zb = bubble_fraction(P, m, 1, schedule="zb-h1")
+            f = bubble_fraction(P, m, 1, schedule="1f1b")
+            assert zb <= f + 1e-15
+            assert zb == pytest.approx(f / 3)
+
+
+def test_zb_h1_inflight_memory_exceeds_1f1b_every_stage():
+    # the price of the W split: deferred weight-grad stash on every stage
+    for P, m in [(4, 4), (4, 8), (8, 64)]:
+        for i in range(P):
+            zb = inflight_microbatches(i, P, m, "zb-h1")
+            f = inflight_microbatches(i, P, m, "1f1b")
+            assert zb > f, (P, m, i)
+
+
+def test_zb_h1_dropped_on_degenerate_pipelines():
+    # P=1 (no bubble to fill): fall back instead of paying W memory
+    plan = _search(("zb-h1",), fixed_pp=1, budget_gb=8)
+    assert plan is not None and plan.schedule == "1f1b"
+    # m < P never occurs from _micro_candidates (m starts at P), so a
+    # zb-only request on a deep pipe still searches zb itself
+    plan = _search(("zb-h1",), fixed_pp=8, budget_gb=8)
+    assert plan is not None and plan.schedule == "zb-h1"
+
+
+def test_zb_h1_plan_serializes_and_compiles():
+    from repro.core import ParallelPlan
+    from repro.runtime.plan_bridge import schedule_program_from_plan
+
+    plan = _search(("zb-h1",), budget_gb=8)
+    assert plan.schedule == "zb-h1"
+    plan2 = ParallelPlan.loads(plan.dumps())
+    assert plan2 == plan
+    prog = schedule_program_from_plan(plan2)
+    assert prog.is_three_phase
+    assert prog.n_stages == plan.pp_degree
+    assert prog.n_micro == plan.n_micro
+
+
+def test_pipeline_iter_time_zb_h1_drain_refill():
+    ts, ns = [1.0, 1.2, 1.1, 1.0], [0.9, 1.1, 1.0, 0.9]
+    # zb-h1 divides the non-critical drain contribution by 3
+    assert pipeline_iter_time(ts, ns, 8, 1, schedule="zb-h1") == pytest.approx(
+        7 * 1.1 + 1.2 + (sum(ts) - 1.2) / 3)
+    # homogeneous stages: m*t + (P-1)*t/3 — the (P-1)/(3m) bubble
+    assert pipeline_iter_time([2.0] * 4, [2.0] * 4, 8, 1,
+                              schedule="zb-h1") == pytest.approx(
+        8 * 2.0 + 3 * 2.0 / 3)
