@@ -1,0 +1,10 @@
+"""``python -m repro.analysis`` — the static-verifier CLI.
+
+The implementation lives in :mod:`repro.launch.lint` next to the other
+entry points (search/train); this shim only forwards."""
+import sys
+
+from repro.launch.lint import main
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,321 @@
+"""Codebase linter: AST checks for jax pitfalls (rule ids ``JAX001``–
+``JAX004``, catalog in ``docs/analysis.md``).
+
+These are the failure modes this codebase has either hit or is one edit
+away from hitting:
+
+  * **JAX001** — Python side effects inside a ``lax.scan`` body.  The body
+    traces once; a ``print`` fires at trace time (not per step), and a
+    ``global``/``nonlocal`` write or a closure-list ``.append`` records
+    tracers that leak out of the trace.
+  * **JAX002** — concrete truth-value checks on traced parameters inside a
+    jitted function or scan body.  ``if x:`` on a tracer raises
+    ``TracerBoolConversionError`` at trace time — unless the parameter is
+    declared static (``static_argnames``/``static_argnums``), which the
+    linter respects.
+  * **JAX003** — unhashable static arguments: a parameter named in
+    ``static_argnames`` whose default is a mutable literal (list/dict/set)
+    fails at call time with an unhashable-type error.
+  * **JAX004** — ``jax``/``jnp`` imports in ``repro/core/``.  The search
+    hot loops are pure NumPy by design (array dispatch overhead dominates
+    at the DP's per-cell granularity); ``core/profiler.py`` is the one
+    sanctioned exception (it *is* the jax-facing measurement shim).
+
+The pass is purely syntactic — no imports of the linted code — so it runs
+on any tree, including broken ones.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from .diagnostics import Diagnostic, error, warning
+
+#: files under repro/core/ allowed to import jax (the measurement shim)
+CORE_JAX_EXCEPTIONS = ("profiler.py",)
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.DictComp,
+                     ast.ListComp, ast.SetComp)
+
+
+def _is_scan_call(call: ast.Call) -> bool:
+    """Matches ``lax.scan(...)`` / ``jax.lax.scan(...)`` / ``scan(...)``
+    (imported name)."""
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "scan":
+        base = f.value
+        if isinstance(base, ast.Name) and base.id == "lax":
+            return True
+        if (isinstance(base, ast.Attribute) and base.attr == "lax"
+                and isinstance(base.value, ast.Name)
+                and base.value.id == "jax"):
+            return True
+    return False
+
+
+def _is_jit_expr(node: ast.AST) -> bool:
+    """Matches ``jax.jit`` / ``jit`` used as a decorator or wrapper."""
+    if isinstance(node, ast.Name) and node.id == "jit":
+        return True
+    return (isinstance(node, ast.Attribute) and node.attr == "jit"
+            and isinstance(node.value, ast.Name) and node.value.id == "jax")
+
+
+def _static_names_from_call(call: ast.Call,
+                            func_args: Optional[ast.arguments]) -> Set[str]:
+    """Parameter names declared static in a ``jit``/``partial(jit, ...)``
+    call's keywords (``static_argnames`` strings, ``static_argnums``
+    resolved positionally when the signature is known)."""
+    out: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(
+                        node.value, str):
+                    out.add(node.value)
+        elif kw.arg == "static_argnums" and func_args is not None:
+            pos = [a.arg for a in func_args.posonlyargs + func_args.args]
+            for node in ast.walk(kw.value):
+                if isinstance(node, ast.Constant) and isinstance(
+                        node.value, int) and 0 <= node.value < len(pos):
+                    out.add(pos[node.value])
+    return out
+
+
+class _FileLint(ast.NodeVisitor):
+    """One file's worth of JAX001–JAX003 findings."""
+
+    def __init__(self, path: str, tree: ast.Module):
+        self.path = path
+        self.tree = tree
+        self.out: List[Diagnostic] = []
+        # name -> def node, for resolving scan-body references
+        self.defs: Dict[str, ast.AST] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs.setdefault(node.name, node)
+
+    def loc(self, node: ast.AST) -> str:
+        return f"{self.path}:{getattr(node, 'lineno', 0)}"
+
+    def run(self) -> List[Diagnostic]:
+        self.visit(self.tree)
+        return self.out
+
+    # --- traced-context discovery ---------------------------------------
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if _is_scan_call(node) and node.args:
+            body = node.args[0]
+            fn: Optional[ast.AST] = None
+            if isinstance(body, ast.Lambda):
+                fn = body
+            elif isinstance(body, ast.Name):
+                fn = self.defs.get(body.id)
+            if fn is not None:
+                self._check_scan_body(fn)
+                self._check_traced_bools(fn, static=set(),
+                                         context="lax.scan body")
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        static: Optional[Set[str]] = None
+        for dec in node.decorator_list:
+            if _is_jit_expr(dec):
+                static = set()
+            elif isinstance(dec, ast.Call):
+                if _is_jit_expr(dec.func):
+                    static = _static_names_from_call(dec, node.args)
+                elif (isinstance(dec.func, ast.Attribute)
+                      and dec.func.attr == "partial"
+                      or isinstance(dec.func, ast.Name)
+                      and dec.func.id == "partial") and dec.args \
+                        and _is_jit_expr(dec.args[0]):
+                    static = _static_names_from_call(dec, node.args)
+        if static is not None:
+            self._check_traced_bools(node, static=static,
+                                     context=f"jitted '{node.name}'")
+            self._check_static_defaults(node, static)
+        self.generic_visit(node)
+
+    # --- JAX001: side effects in scan bodies ----------------------------
+
+    def _check_scan_body(self, fn: ast.AST) -> None:
+        local_targets: Set[str] = set()
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = fn.args
+            local_targets |= {x.arg for x in
+                             a.posonlyargs + a.args + a.kwonlyargs}
+            body = fn.body
+        elif isinstance(fn, ast.Lambda):
+            a = fn.args
+            local_targets |= {x.arg for x in
+                             a.posonlyargs + a.args + a.kwonlyargs}
+            body = [ast.Expr(fn.body)]
+        else:  # pragma: no cover - callers pass defs/lambdas only
+            return
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, (ast.Global, ast.Nonlocal)):
+                    self.out.append(error(
+                        "JAX001", self.loc(node),
+                        f"{'global' if isinstance(node, ast.Global) else 'nonlocal'} "
+                        "write inside a lax.scan body: the assignment "
+                        "happens once at trace time and leaks a tracer",
+                        "thread state through the scan carry instead"))
+                elif isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                local_targets.add(n.id)
+                elif isinstance(node, ast.Call):
+                    f = node.func
+                    if isinstance(f, ast.Name) and f.id == "print":
+                        self.out.append(error(
+                            "JAX001", self.loc(node),
+                            "print() inside a lax.scan body fires once at "
+                            "trace time, not per step",
+                            "use jax.debug.print for runtime values"))
+                    elif (isinstance(f, ast.Attribute)
+                          and f.attr in ("append", "extend", "add",
+                                         "update", "setdefault")
+                          and isinstance(f.value, ast.Name)
+                          and f.value.id not in local_targets):
+                        self.out.append(warning(
+                            "JAX001", self.loc(node),
+                            f"'{f.value.id}.{f.attr}(...)' mutates a "
+                            "closed-over object from a lax.scan body: it "
+                            "runs once at trace time and records tracers",
+                            "accumulate through the scan carry / ys "
+                            "output instead"))
+
+    # --- JAX002: concrete bool checks on traced params ------------------
+
+    def _check_traced_bools(self, fn: ast.AST, static: Set[str],
+                            context: str) -> None:
+        if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            a = fn.args
+            body = fn.body
+        elif isinstance(fn, ast.Lambda):
+            a = fn.args
+            body = [ast.Expr(fn.body)]
+        else:  # pragma: no cover
+            return
+        params = {x.arg for x in a.posonlyargs + a.args + a.kwonlyargs}
+        params -= static
+        params.discard("self")
+        # a param reassigned in the body is no longer (just) the tracer
+        reassigned: Set[str] = set()
+        for stmt in body:
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Assign):
+                    for t in node.targets:
+                        for n in ast.walk(t):
+                            if isinstance(n, ast.Name):
+                                reassigned.add(n.id)
+        params -= reassigned
+        for stmt in body:
+            for node in ast.walk(stmt):
+                test = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test = node.test
+                elif isinstance(node, ast.IfExp):
+                    test = node.test
+                if (isinstance(test, ast.Name) and test.id in params):
+                    self.out.append(warning(
+                        "JAX002", self.loc(test),
+                        f"concrete truth-value check on parameter "
+                        f"'{test.id}' inside {context}: if it is traced "
+                        "this raises TracerBoolConversionError at trace "
+                        "time",
+                        "declare it in static_argnames, or use "
+                        "jnp.where/lax.cond for value-dependent "
+                        "branches"))
+
+    # --- JAX003: unhashable static args ---------------------------------
+
+    def _check_static_defaults(self, fn: ast.FunctionDef,
+                               static: Set[str]) -> None:
+        a = fn.args
+        pos = a.posonlyargs + a.args
+        for arg, default in zip(pos[len(pos) - len(a.defaults):],
+                                a.defaults):
+            if arg.arg in static and isinstance(default, _MUTABLE_LITERALS):
+                self.out.append(error(
+                    "JAX003", self.loc(default),
+                    f"static argument '{arg.arg}' of '{fn.name}' defaults "
+                    "to a mutable literal: jit hashes static args, so the "
+                    "first call raises unhashable-type",
+                    "use a tuple/frozenset/None sentinel"))
+        for arg, default in zip(a.kwonlyargs, a.kw_defaults):
+            if (default is not None and arg.arg in static
+                    and isinstance(default, _MUTABLE_LITERALS)):
+                self.out.append(error(
+                    "JAX003", self.loc(default),
+                    f"static argument '{arg.arg}' of '{fn.name}' defaults "
+                    "to a mutable literal: jit hashes static args, so the "
+                    "first call raises unhashable-type",
+                    "use a tuple/frozenset/None sentinel"))
+
+
+def _check_core_purity(path: str, rel: str, tree: ast.Module
+                       ) -> List[Diagnostic]:
+    """JAX004: repro/core/ stays NumPy-only (module-level imports)."""
+    out: List[Diagnostic] = []
+    norm = rel.replace(os.sep, "/")
+    if "core/" not in norm or os.path.basename(rel) in CORE_JAX_EXCEPTIONS:
+        return out
+    for node in ast.walk(tree):
+        names: List[str] = []
+        if isinstance(node, ast.Import):
+            names = [a.name for a in node.names]
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            names = [node.module]
+        for name in names:
+            root = name.split(".")[0]
+            if root == "jax":
+                out.append(error(
+                    "JAX004", f"{path}:{node.lineno}",
+                    f"'{name}' imported in repro/core/: the search hot "
+                    "loops are pure NumPy by design (per-DP-cell jnp "
+                    "dispatch overhead dominates)",
+                    "keep jax behind runtime/ or core/profiler.py"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
+def lint_source(code: str, path: str, *, rel: Optional[str] = None
+                ) -> List[Diagnostic]:
+    """Lint one file's source text.  ``rel`` is the repo-relative path used
+    for the JAX004 location test (defaults to ``path``)."""
+    try:
+        tree = ast.parse(code, filename=path)
+    except SyntaxError as e:
+        return [error("JAX000", f"{path}:{e.lineno or 0}",
+                      f"file does not parse: {e.msg}")]
+    out = _FileLint(path, tree).run()
+    out.extend(_check_core_purity(path, rel if rel is not None else path,
+                                  tree))
+    out.sort(key=lambda d: d.location)
+    return out
+
+
+def lint_paths(paths: Sequence[str]) -> List[Diagnostic]:
+    """Lint every ``.py`` file under the given files/directories."""
+    out: List[Diagnostic] = []
+    files: List[str] = []
+    for p in paths:
+        if os.path.isdir(p):
+            for root, _dirs, names in os.walk(p):
+                files.extend(os.path.join(root, n) for n in sorted(names)
+                             if n.endswith(".py"))
+        else:
+            files.append(p)
+    for f in sorted(files):
+        with open(f, encoding="utf-8") as fh:
+            out.extend(lint_source(fh.read(), f))
+    return out

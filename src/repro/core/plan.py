@@ -23,6 +23,20 @@ from .strategy import Strategy
 PLAN_FORMAT_VERSION = 2
 
 
+class PlanFormatError(ValueError):
+    """Structured plan-JSON failure: names the offending field.
+
+    Raised by :meth:`ParallelPlan.from_json` instead of leaking a bare
+    ``KeyError``/``TypeError`` stack trace, so CLIs and the plan verifier
+    (``repro.analysis.plan_lint``) can point at the exact field.  The full
+    multi-diagnostic verification lives in the verifier; this is the
+    minimal always-on guard for any loading path."""
+
+    def __init__(self, field: str, message: str):
+        self.field = field
+        super().__init__(f"plan.{field}: {message}")
+
+
 @dataclasses.dataclass
 class ParallelPlan:
     """A complete distributed-execution plan for one model + cluster."""
@@ -128,13 +142,43 @@ class ParallelPlan:
 
     @staticmethod
     def from_json(d: Dict) -> "ParallelPlan":
+        if not isinstance(d, dict):
+            raise PlanFormatError(
+                "", f"plan JSON must be an object, got {type(d).__name__}")
+        ver = d.get("format_version", 0)
+        if isinstance(ver, int) and ver > PLAN_FORMAT_VERSION:
+            raise PlanFormatError(
+                "format_version",
+                f"declares v{ver}, but this build reads "
+                f"<= v{PLAN_FORMAT_VERSION}; re-emit the plan with this "
+                "build's search CLI")
+
+        def req(key):
+            try:
+                return d[key]
+            except KeyError:
+                raise PlanFormatError(
+                    key, "required field is missing (every plan version "
+                         "carries it; the file is truncated or not a "
+                         "plan)") from None
+
+        strategies = []
+        for j, s in enumerate(req("strategies")):
+            try:
+                strategies.append(Strategy.from_json(s))
+            except (KeyError, TypeError, ValueError) as e:
+                raise PlanFormatError(
+                    f"strategies[{j}]",
+                    f"strategy does not parse ({e!r}); see "
+                    "docs/plan-format.md for the per-layer schema"
+                ) from None
         return ParallelPlan(
-            n_devices=d["n_devices"],
-            pp_degree=d["pp_degree"],
-            partition=list(d["partition"]),
-            strategies=[Strategy.from_json(s) for s in d["strategies"]],
-            global_batch=d["global_batch"],
-            n_micro=d["n_micro"],
+            n_devices=req("n_devices"),
+            pp_degree=req("pp_degree"),
+            partition=list(req("partition")),
+            strategies=strategies,
+            global_batch=req("global_batch"),
+            n_micro=req("n_micro"),
             schedule=d.get("schedule", "1f1b"),
             # PR-1-era plan JSON predates interleaved schedules
             vpp_degree=d.get("vpp_degree", 1),

@@ -40,6 +40,37 @@ from repro.core import (CLUSTERS, GalvatronOptimizer, galvatron_variant)
 GB = 1024 ** 3
 
 
+def certify_plans(plans, *, strict: bool = False, log=print) -> bool:
+    """Run the static verifier on every plan the search is about to emit.
+
+    Every plan is checked by the plan verifier (``repro.analysis``) and
+    its prescribed schedule table by the happens-before certifier —
+    the search can never serialize an uncertified plan.  Error-severity
+    findings (and, under ``strict``, warnings too) veto serialization;
+    diagnostics are printed either way.
+
+    Returns True when every plan certifies.
+    """
+    from repro.analysis import verify_plan_json, verify_program
+    from repro.runtime.schedules import compile_schedule
+
+    ok = True
+    for k, plan in enumerate(plans):
+        loc = f"plan[{k}]" if len(plans) > 1 else "plan"
+        diags = verify_plan_json(plan.to_json(), location=loc)
+        if not any(d.severity == "error" for d in diags):
+            diags += verify_program(compile_schedule(
+                plan.schedule, plan.pp_degree, plan.n_micro,
+                plan.vpp_degree))
+        bad = [d for d in diags if d.severity == "error"
+               or (strict and d.severity == "warning")]
+        for d in bad:
+            log(d.format())
+        if bad:
+            ok = False
+    return ok
+
+
 def parse_budget_sweep(text: str) -> List[float]:
     """GB values: ``4,6,8`` or arithmetic ellipsis ``a,b,...,z``."""
     parts = [p.strip() for p in text.split(",") if p.strip()]
@@ -166,6 +197,11 @@ def main(argv=None) -> int:
                          "default: the variant's single schedule)")
     ap.add_argument("--verbose", action="store_true",
                     help="print every improving (B, P, budget) candidate")
+    ap.add_argument("--strict", action="store_true",
+                    help="fail (exit 2) if an emitted plan carries any "
+                         "verifier warnings, not just errors; plan files "
+                         "read elsewhere also reject deprecated v0/v1 "
+                         "under strict")
     ap.add_argument("--out", default="", help="write frontier/plan JSON here")
     args = ap.parse_args(argv)
 
@@ -189,6 +225,7 @@ def main(argv=None) -> int:
               f"search {opt.stats['search_seconds']:.2f}s "
               f"({opt.stats['stage_cache_hits']:.0f} cache hits / "
               f"{opt.stats['stage_cache_misses']:.0f} misses)")
+        emitted = [p.plan for p in frontier.feasible_points()]
         payload = frontier.dumps()
     else:
         # a 1-point sweep is byte-identical to optimize() and honours the
@@ -203,7 +240,16 @@ def main(argv=None) -> int:
             return 1
         print(f"{budget / GB:7.1f} GB  {plan.est_throughput:10.2f} samples/s  "
               f"{plan.summary()}")
+        emitted = [plan]
         payload = plan.dumps()
+
+    # the verifier gates serialization: an uncertified plan is never
+    # written (docs/analysis.md)
+    if not certify_plans(emitted, strict=args.strict,
+                         log=lambda s: print(s, file=sys.stderr)):
+        print(f"verification failed for {len(emitted)} emitted plan(s); "
+              "not writing output", file=sys.stderr)
+        return 2
 
     if args.out:
         pathlib.Path(args.out).write_text(payload + "\n")

@@ -118,6 +118,12 @@ def main(argv=None) -> None:
     ap.add_argument("--corpus", default=None, help="text file (byte-level LM)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--plan", default=None, metavar="FILE",
+                    help="load a searched plan JSON (verified by "
+                         "repro.analysis on load) instead of re-searching")
+    ap.add_argument("--strict", action="store_true",
+                    help="reject deprecated v0/v1 --plan files with a "
+                         "structured deprecation diagnostic (PLN001)")
     ap.add_argument("--plan-out", default=None)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--pipeline", action="store_true",
@@ -134,10 +140,19 @@ def main(argv=None) -> None:
         cfg = cfg.with_(n_layers=args.layers or cfg.n_layers,
                         d_model=args.d_model or cfg.d_model)
 
-    # 1) the paper's engine searches the plan (for the target pod),
-    #    including the pipeline-schedule dimension
-    plan = search_plan(cfg, args.seq)
-    print("searched plan:", plan.summary())
+    # 1) the plan: loaded from a verified file, or searched fresh by the
+    #    paper's engine (for the target pod), including the
+    #    pipeline-schedule dimension
+    if args.plan:
+        from repro.analysis import load_plan_file
+        plan, report = load_plan_file(args.plan, strict=args.strict)
+        for d in report.warnings():
+            print(d.format())
+        print(f"loaded plan {args.plan} (verified: "
+              f"{len(report.warnings())} warning(s))")
+    else:
+        plan = search_plan(cfg, args.seq)
+    print("plan:", plan.summary())
     print(f"schedule: {plan.schedule} vpp={plan.vpp_degree} "
           f"m={plan.n_micro}")
     if args.plan_out:

@@ -61,22 +61,53 @@ def policy_from_plan(cfg: ModelConfig, plan: ParallelPlan, *,
                        seq_shard=seq_shard)
 
 
-def schedule_program_from_plan(plan: ParallelPlan) -> ScheduleProgram:
+def schedule_program_from_plan(plan: ParallelPlan, *,
+                               validate: bool = False) -> ScheduleProgram:
     """Compile the plan's searched (schedule, pp_degree, n_micro,
     vpp_degree) into the tick program the pipeline runtime executes.
 
     Three-phase plans (``schedule="zb-h1"``) compile to the full F/B/W
     table; the executor runs its forward projection (see
-    ``runtime/pipeline.py::make_pipeline_loss_from_program``)."""
-    return compile_schedule(plan.schedule, plan.pp_degree, plan.n_micro,
-                            plan.vpp_degree)
+    ``runtime/pipeline.py::make_pipeline_loss_from_program``).
+
+    An uncompilable (schedule, P, m, V) combo raises a structured
+    :class:`repro.analysis.DiagnosticError` naming the offending plan
+    field (rule ``PLN004``) instead of leaking ``compile_schedule``'s
+    bare ``ValueError``; ``validate=True`` additionally runs the full
+    schedule verifier on the compiled table."""
+    from repro.analysis.diagnostics import DiagnosticError, error
+    try:
+        return compile_schedule(plan.schedule, plan.pp_degree, plan.n_micro,
+                                plan.vpp_degree, validate=validate)
+    except DiagnosticError:
+        raise
+    except ValueError as e:
+        raise DiagnosticError([error(
+            "PLN004", "plan.schedule",
+            f"plan prescribes an uncompilable schedule combo "
+            f"(schedule={plan.schedule!r}, pp_degree={plan.pp_degree}, "
+            f"n_micro={plan.n_micro}, vpp_degree={plan.vpp_degree}): {e}",
+            "run `python -m repro.analysis --plan <file>` for the full "
+            "verdict")], context="schedule_program_from_plan") from e
 
 
 def pipeline_loss_from_plan(cfg: ModelConfig, mesh, plan: ParallelPlan):
     """shard_map pipeline loss executing the plan's searched schedule.
 
     The mesh's ``pipe`` axis size must equal ``plan.pp_degree`` (the
-    program tables are compiled for exactly that stage count)."""
+    program tables are compiled for exactly that stage count); a mismatch
+    raises a structured diagnostic (rule ``PLN006``) up front rather than
+    a shape error from deep inside ``shard_map``."""
     from repro.runtime.pipeline import make_pipeline_loss_from_program
+    n_pipe = dict(zip(mesh.axis_names, mesh.devices.shape)).get("pipe", 1)
+    if n_pipe != plan.pp_degree:
+        from repro.analysis.diagnostics import DiagnosticError, error
+        raise DiagnosticError([error(
+            "PLN006", "plan.pp_degree",
+            f"plan was searched for pp_degree={plan.pp_degree} but the "
+            f"mesh's 'pipe' axis has {n_pipe} device(s)",
+            "build the mesh with make_pipeline_mesh(n_stages="
+            f"{plan.pp_degree}, ...) or re-search for this cluster")],
+            context="pipeline_loss_from_plan")
     prog = schedule_program_from_plan(plan)
     return make_pipeline_loss_from_program(cfg, mesh, prog)

@@ -158,8 +158,21 @@ class ScheduleProgram:
             assert getattr(self, f).shape == (self.n_ticks, self.n_stages), f
 
 
+def _validate_program(prog: ScheduleProgram) -> ScheduleProgram:
+    """Run the static schedule verifier (``repro.analysis``) on a freshly
+    compiled table; raise its structured ``DiagnosticError`` on any
+    error-severity finding.  Local import: analysis imports this module,
+    and validation is opt-in on the hot path."""
+    from repro.analysis.schedule_lint import certify_program
+    certify_program(prog).raise_if_errors(
+        context=f"compile_schedule({prog.name!r}, P={prog.n_stages}, "
+                f"m={prog.n_micro}, V={prog.n_chunks})")
+    return prog
+
+
 def compile_schedule(name: str, n_stages: int, n_micro: int,
-                     n_chunks: Optional[int] = None) -> ScheduleProgram:
+                     n_chunks: Optional[int] = None, *,
+                     validate: bool = False) -> ScheduleProgram:
     """Compile ``name`` into a :class:`ScheduleProgram`.
 
     Args:
@@ -170,6 +183,13 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
       n_chunks: ``V`` — virtual chunks per stage.  Only meaningful for
         ``1f1b-interleaved`` (default 2 there, must be >= 2); every other
         schedule is single-chunk and rejects V > 1.
+      validate: run the static schedule verifier on the compiled table
+        (happens-before edges, loss coverage, certified liveness vs the
+        cost model, bubble pin — the invariants documented in
+        ``docs/analysis.md``) and raise
+        :class:`repro.analysis.DiagnosticError` on any error finding.
+        Off by default: the searcher compiles thousands of tables whose
+        shape-level legality the optimizer already guarantees.
 
     Returns:
       The compiled :class:`ScheduleProgram` — per-tick ``(T, P)`` tables
@@ -177,7 +197,10 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
 
     Raises:
       ValueError: unknown ``name``, non-positive ``n_stages`` /
-        ``n_micro``, or an ``n_chunks`` the schedule cannot use.
+        ``n_micro``, or an ``n_chunks`` the schedule cannot use; with
+        ``validate=True`` also any certification failure (the raised
+        ``DiagnosticError`` is a ``ValueError`` carrying the structured
+        diagnostics).
     """
     if name not in SCHEDULE_NAMES:
         raise ValueError(f"unknown schedule {name!r}; "
@@ -190,7 +213,8 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
         if n_chunks is not None and int(n_chunks) != 1:
             raise ValueError(f"schedule 'zb-h1' is single-chunk; "
                              f"got n_chunks={n_chunks}")
-        return _compile_zb_h1(int(n_stages), int(n_micro))
+        prog = _compile_zb_h1(int(n_stages), int(n_micro))
+        return _validate_program(prog) if validate else prog
     if name == "1f1b-interleaved":
         V = 2 if n_chunks is None else int(n_chunks)
         if V < 2:
@@ -220,7 +244,7 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
     mb = g * P + r
     valid = nonneg & (mb < m)
     loss_valid = valid & (i == P - 1) & (v == V - 1)
-    return ScheduleProgram(
+    prog = ScheduleProgram(
         name=name, n_stages=P, n_chunks=V, n_micro=m, n_ticks=T,
         remat=(name != "gpipe"),
         mb_index=np.clip(mb, 0, m - 1).astype(np.int32),
@@ -228,6 +252,7 @@ def compile_schedule(name: str, n_stages: int, n_micro: int,
         valid=valid,
         loss_valid=loss_valid,
     )
+    return _validate_program(prog) if validate else prog
 
 
 def _compile_zb_h1(P: int, m: int) -> ScheduleProgram:

@@ -73,6 +73,24 @@ def test_docs_search_cli_help_embed_is_current(monkeypatch, capsys):
         "COLUMNS=80 python -m repro.launch.search --help")
 
 
+def test_docs_analysis_cli_help_embed_is_current(monkeypatch, capsys):
+    """docs/analysis.md embeds the lint CLI's --help; regenerate from the
+    live parser at the same wrap and require a byte match."""
+    from repro.launch import lint as lint_cli
+
+    monkeypatch.setenv("COLUMNS", "80")
+    with pytest.raises(SystemExit):
+        lint_cli.main(["--help"])
+    expected = capsys.readouterr().out
+    doc = (REPO / "docs" / "analysis.md").read_text()
+    m = re.search(r"```text\n(usage: python -m repro\.analysis.*?)```\n",
+                  doc, re.S)
+    assert m, "docs/analysis.md lost its embedded --help block"
+    assert m.group(1) == expected, (
+        "docs/analysis.md --help embed is stale; regenerate with "
+        "COLUMNS=80 python -m repro.analysis --help")
+
+
 @pytest.mark.parametrize("path", LINKED_MD, ids=lambda p: p.name)
 def test_docs_relative_links_resolve(path):
     assert path.exists(), path

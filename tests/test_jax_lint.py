@@ -1,0 +1,181 @@
+"""Jax-pitfall AST linter (repro.analysis.jax_lint): each rule fires on a
+minimal reproduction of its pitfall, respects the declared-static escape
+hatches, and — the CI contract — the real ``src/`` tree lints clean."""
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import lint_paths, lint_source
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+
+def rules(code, path="t.py", severity=None):
+    diags = lint_source(textwrap.dedent(code), path)
+    if severity:
+        diags = [d for d in diags if d.severity == severity]
+    return sorted({d.rule for d in diags})
+
+
+# ---------------------------------------------------------------------------
+# JAX001: side effects in lax.scan bodies
+# ---------------------------------------------------------------------------
+
+def test_print_in_scan_body_is_error():
+    assert rules("""
+        from jax import lax
+        def body(carry, x):
+            print("step", x)
+            return carry + x, carry
+        def run(xs):
+            return lax.scan(body, 0.0, xs)
+    """, severity="error") == ["JAX001"]
+
+
+def test_global_write_in_scan_body_is_error():
+    assert rules("""
+        import jax
+        steps = 0
+        def body(c, x):
+            global steps
+            steps += 1
+            return c, x
+        def run(xs):
+            return jax.lax.scan(body, 0.0, xs)
+    """, severity="error") == ["JAX001"]
+
+
+def test_closure_append_in_scan_body_warns():
+    assert rules("""
+        from jax import lax
+        acc = []
+        def body(c, x):
+            acc.append(x)
+            return c, x
+        def run(xs):
+            return lax.scan(body, 0.0, xs)
+    """, severity="warning") == ["JAX001"]
+
+
+def test_scan_lambda_body_is_checked():
+    assert rules("""
+        from jax import lax
+        acc = []
+        def run(xs):
+            return lax.scan(lambda c, x: (c, acc.append(x)), 0.0, xs)
+    """) == ["JAX001"]
+
+
+def test_local_mutation_in_scan_body_is_fine():
+    assert rules("""
+        from jax import lax
+        def body(c, x):
+            parts = []
+            parts.append(x)
+            return c, parts[0]
+        def run(xs):
+            return lax.scan(body, 0.0, xs)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# JAX002: concrete bool checks on traced parameters
+# ---------------------------------------------------------------------------
+
+def test_bool_check_on_traced_param_warns():
+    assert rules("""
+        import jax
+        @jax.jit
+        def f(x, flag):
+            if flag:
+                return x
+            return -x
+    """, severity="warning") == ["JAX002"]
+
+
+def test_static_argnames_param_is_exempt():
+    assert rules("""
+        import functools, jax
+        @functools.partial(jax.jit, static_argnames=("causal", "window"))
+        def f(x, causal, window):
+            if causal:
+                return x
+            return -x
+    """) == []
+
+
+def test_static_argnums_param_is_exempt():
+    assert rules("""
+        import functools, jax
+        @functools.partial(jax.jit, static_argnums=(1,))
+        def f(x, causal):
+            if causal:
+                return x
+            return -x
+    """) == []
+
+
+def test_is_none_checks_do_not_fire():
+    assert rules("""
+        import jax
+        @jax.jit
+        def f(x, mask):
+            if mask is None:
+                return x
+            return x * mask
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# JAX003: unhashable static args
+# ---------------------------------------------------------------------------
+
+def test_mutable_static_default_is_error():
+    assert rules("""
+        import functools, jax
+        @functools.partial(jax.jit, static_argnames=("shape",))
+        def f(x, shape=[1, 2]):
+            return x.reshape(shape)
+    """, severity="error") == ["JAX003"]
+
+
+def test_tuple_static_default_is_fine():
+    assert rules("""
+        import functools, jax
+        @functools.partial(jax.jit, static_argnames=("shape",))
+        def f(x, shape=(1, 2)):
+            return x.reshape(shape)
+    """) == []
+
+
+# ---------------------------------------------------------------------------
+# JAX004: repro/core/ stays NumPy-only
+# ---------------------------------------------------------------------------
+
+def test_jax_import_in_core_is_error():
+    assert rules("import jax.numpy as jnp\n",
+                 path="src/repro/core/cost_model.py") == ["JAX004"]
+    assert rules("from jax import lax\n",
+                 path="src/repro/core/dp_search.py") == ["JAX004"]
+
+
+def test_core_profiler_is_the_sanctioned_exception():
+    assert rules("import jax\n", path="src/repro/core/profiler.py") == []
+
+
+def test_jax_import_outside_core_is_fine():
+    assert rules("import jax\n", path="src/repro/runtime/pipeline.py") == []
+
+
+def test_syntax_error_is_reported_not_raised():
+    assert rules("def broken(:\n") == ["JAX000"]
+
+
+# ---------------------------------------------------------------------------
+# the CI contract: the real tree is clean
+# ---------------------------------------------------------------------------
+
+def test_src_tree_lints_clean():
+    diags = lint_paths([str(REPO / "src")])
+    assert diags == [], "\n".join(d.format() for d in diags)

@@ -44,7 +44,13 @@ def test_1f1b_same_order_as_gpipe_but_remat():
 def test_handoff_consistency_and_loss_coverage(P, m, V):
     """Every valid slot's producer one tick earlier is valid with the same
     micro-batch and the previous virtual stage — the invariant that makes
-    bubble-slot garbage unreachable from any counted value."""
+    bubble-slot garbage unreachable from any counted value.
+
+    The canonical statement of these invariants now lives in the static
+    verifier (repro.analysis.schedule_lint, exercised via
+    ``compile_schedule(validate=...)`` in tests/test_schedule_lint.py);
+    the explicit loop here stays as an independent spot-check of the same
+    property."""
     name = "1f1b-interleaved" if V > 1 else "gpipe"
     pr = compile_schedule(name, P, m, V if V > 1 else None)
     losses = np.zeros(m, int)
@@ -137,8 +143,12 @@ def _max_overlap(starts, ends):
 def test_zb_h1_three_phase_dependencies_and_coverage(P, m):
     """Every (stage, micro-batch) runs exactly one F, one B and one W, in
     dependency order: F follows the upstream F, B follows this stage's F
-    and the downstream B, W follows this stage's B."""
-    pr = compile_schedule("zb-h1", P, m)
+    and the downstream B, W follows this stage's B.
+
+    The verifier certifies the same happens-before edges (and more) as a
+    compiler post-condition (``validate=True``); the explicit loop here
+    stays as an independent spot-check of the same property."""
+    pr = compile_schedule("zb-h1", P, m, validate=True)
     assert pr.is_three_phase and pr.remat and pr.n_chunks == 1
     ft, bt, wt = _zb_phase_ticks(pr)
     assert (ft >= 0).all() and (bt >= 0).all() and (wt >= 0).all()

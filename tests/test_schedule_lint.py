@@ -1,0 +1,242 @@
+"""Schedule verifier (repro.analysis.schedule_lint): the full acceptance
+grid certifies clean with liveness pinned exactly against the cost model,
+and every seeded mutation of a valid program table is flagged with the
+right rule id — no silent passes.
+
+Mutations are built with ``dataclasses.replace`` on copies of the compiled
+(T, P) tables, so each one corrupts exactly the invariant named in its
+test."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.analysis import (DiagnosticError, certify_live_buffers,
+                            certify_program, schedule_grid, schedule_legal,
+                            verify_program)
+from repro.core.pipeline_balance import (ZB_W_ACT_FRAC,
+                                         inflight_microbatches,
+                                         zb_w_pending_max)
+from repro.runtime.schedules import (PHASE_B, PHASE_F, PHASE_W,
+                                     compile_schedule)
+
+GRID = list(schedule_grid())
+
+
+def error_rules(pr):
+    return sorted({d.rule for d in verify_program(pr)
+                   if d.severity == "error"})
+
+
+def _mutable(pr):
+    """A program whose table arrays are private writable copies."""
+    return dataclasses.replace(
+        pr, mb_index=pr.mb_index.copy(), chunk_index=pr.chunk_index.copy(),
+        valid=pr.valid.copy(), loss_valid=pr.loss_valid.copy(),
+        phase=None if pr.phase is None else pr.phase.copy())
+
+
+# ---------------------------------------------------------------------------
+# the acceptance grid: P in {1,2,4,8} x m in {1..16} x V in {1,2}
+# ---------------------------------------------------------------------------
+
+def test_grid_covers_all_four_schedules():
+    names = {g[0] for g in GRID}
+    assert names == {"gpipe", "1f1b", "1f1b-interleaved", "zb-h1"}
+    assert len(GRID) == 179          # 64 + 64 + 14 + 37 legal combos
+
+
+@pytest.mark.parametrize("name,P,m,V", GRID,
+                         ids=lambda v: str(v))
+def test_grid_certifies_with_zero_errors(name, P, m, V):
+    pr = compile_schedule(name, P, m, V if V > 1 else None)
+    report = certify_program(pr)
+    assert report.ok, report.format()
+
+
+@pytest.mark.parametrize("name,P,m,V", GRID, ids=lambda v: str(v))
+def test_certified_liveness_matches_cost_model_exactly(name, P, m, V):
+    """The liveness analysis and core/pipeline_balance.py agree *exactly*
+    on every stage's peak live activation sets (and on the deferred
+    weight-grad pile for zb-h1) — drift on either side is a CI failure."""
+    pr = compile_schedule(name, P, m, V if V > 1 else None)
+    certs = certify_live_buffers(pr)
+    assert [c.stage for c in certs] == list(range(P))
+    for c in certs:
+        assert c.live_sets == pytest.approx(
+            inflight_microbatches(c.stage, P, m, name, V), abs=1e-9)
+        if name == "zb-h1":
+            assert c.w_pending == zb_w_pending_max(c.stage, P, m)
+            assert c.live_sets == pytest.approx(
+                c.fwd_stash + ZB_W_ACT_FRAC * c.w_pending)
+        else:
+            assert c.w_pending == 0
+
+
+def test_schedule_legal_mirrors_optimizer_rules():
+    assert schedule_legal("gpipe", 1, 1, 1)
+    assert schedule_legal("1f1b", 8, 16, 1)
+    assert not schedule_legal("1f1b", 8, 16, 2)       # single-chunk
+    assert not schedule_legal("1f1b-interleaved", 1, 4, 2)   # P == 1
+    assert not schedule_legal("1f1b-interleaved", 4, 6, 2)   # ragged m % P
+    assert schedule_legal("1f1b-interleaved", 4, 8, 2)
+    assert not schedule_legal("zb-h1", 1, 4, 1)       # P == 1
+    assert not schedule_legal("zb-h1", 4, 2, 1)       # m < P
+    assert schedule_legal("zb-h1", 4, 4, 1)
+    assert not schedule_legal("nope", 4, 8, 1)
+
+
+# ---------------------------------------------------------------------------
+# seeded mutations: each corruption is flagged with its specific rule id
+# ---------------------------------------------------------------------------
+
+def test_mutation_swap_two_ticks_breaks_happens_before():
+    """Swapping stage 0's first two slots (F0 and F1 for gpipe; F and B
+    for zb-h1) runs a consumer at or before its producer -> SCH001."""
+    pr = _mutable(compile_schedule("zb-h1", 4, 8))
+    ts = [t for t in range(pr.n_ticks) if pr.valid[t, 0]][3:5]   # F3, B0
+    for a in (pr.mb_index, pr.chunk_index, pr.phase):
+        a[ts[0], 0], a[ts[1], 0] = int(a[ts[1], 0]), int(a[ts[0], 0])
+    assert "SCH001" in error_rules(pr)
+
+
+def test_mutation_drop_dependency_edge_is_use_before_def():
+    """Invalidating stage 1's F for one micro-batch leaves stage 2's F (and
+    stage 1's own B) consuming a buffer that is never produced -> SCH002,
+    and the program no longer covers all work -> SCH004."""
+    pr = _mutable(compile_schedule("zb-h1", 4, 8))
+    for t in range(pr.n_ticks):
+        if (pr.valid[t, 1] and pr.phase[t, 1] == PHASE_F
+                and pr.mb_index[t, 1] == 3):
+            pr.valid[t, 1] = False
+    rules = error_rules(pr)
+    assert "SCH002" in rules and "SCH004" in rules
+
+
+def test_mutation_inflate_inflight_cap():
+    """Swapping stage 0's first B with a later F makes it bank one more
+    forward than the flush cap min(P - i, m) allows -> SCH006 (and the
+    memory model no longer matches -> SCH007)."""
+    pr = _mutable(compile_schedule("zb-h1", 4, 8))
+    tb = next(t for t in range(pr.n_ticks)
+              if pr.valid[t, 0] and pr.phase[t, 0] == PHASE_B)
+    tf = next(t for t in range(tb + 1, pr.n_ticks)
+              if pr.valid[t, 0] and pr.phase[t, 0] == PHASE_F)
+    for a in (pr.mb_index, pr.chunk_index, pr.phase):
+        a[tb, 0], a[tf, 0] = int(a[tf, 0]), int(a[tb, 0])
+    rules = error_rules(pr)
+    assert "SCH006" in rules
+    assert "SCH007" in rules
+
+
+def test_mutation_orphan_w_tick():
+    """Retargeting a W slot at a different micro-batch double-consumes one
+    activation-gradient buffer (SCH003) and leaves the original
+    micro-batch's W missing (SCH004)."""
+    pr = _mutable(compile_schedule("zb-h1", 4, 8))
+    tw = next(t for t in range(pr.n_ticks)
+              if pr.valid[t, 2] and pr.phase[t, 2] == PHASE_W)
+    pr.mb_index[tw, 2] = (int(pr.mb_index[tw, 2]) + 1) % pr.n_micro
+    rules = error_rules(pr)
+    assert "SCH003" in rules and "SCH004" in rules
+
+
+def test_mutation_w_without_b_is_use_before_def():
+    """Dropping a B but keeping its W: the weight gradient consumes an
+    activation gradient that is never computed -> SCH002."""
+    pr = _mutable(compile_schedule("zb-h1", 2, 4))
+    tb = next(t for t in range(pr.n_ticks)
+              if pr.valid[t, 1] and pr.phase[t, 1] == PHASE_B
+              and pr.mb_index[t, 1] == 2)
+    pr.valid[tb, 1] = False
+    rules = error_rules(pr)
+    assert "SCH002" in rules
+
+
+def test_mutation_single_phase_handoff_garbage():
+    """Retargeting one interleaved slot at the wrong micro-batch breaks
+    the one-tick/one-hop ring hand-off (SCH009) and duplicates the other
+    micro-batch's event (SCH003)."""
+    pr = _mutable(compile_schedule("1f1b-interleaved", 4, 8, 2))
+    t = next(t for t in range(pr.n_ticks) if pr.valid[t, 2])
+    pr.mb_index[t, 2] = (int(pr.mb_index[t, 2]) + 1) % pr.n_micro
+    rules = error_rules(pr)
+    assert "SCH009" in rules
+    assert "SCH003" in rules and "SCH004" in rules
+
+
+def test_mutation_three_phase_flush_order():
+    """Swapping the first two F micro-batches on a zb-h1 stage destroys
+    the flush order the runtime's forward projection requires -> SCH009."""
+    pr = _mutable(compile_schedule("zb-h1", 2, 4))
+    f_ticks = [t for t in range(pr.n_ticks)
+               if pr.valid[t, 0] and pr.phase[t, 0] == PHASE_F][:2]
+    a = pr.mb_index
+    a[f_ticks[0], 0], a[f_ticks[1], 0] = (int(a[f_ticks[1], 0]),
+                                          int(a[f_ticks[0], 0]))
+    assert "SCH009" in error_rules(pr)
+
+
+def test_mutation_loss_on_wrong_stage():
+    pr = _mutable(compile_schedule("gpipe", 4, 6))
+    t = next(t for t in range(pr.n_ticks) if pr.valid[t, 0])
+    pr.loss_valid[t, 0] = True
+    assert "SCH005" in error_rules(pr)
+
+
+def test_mutation_malformed_indices():
+    pr = _mutable(compile_schedule("gpipe", 4, 6))
+    t = next(t for t in range(pr.n_ticks) if pr.valid[t, 1])
+    pr.mb_index[t, 1] = pr.n_micro + 3
+    assert "SCH010" in error_rules(pr)
+
+
+def test_mutation_stretch_program_breaks_bubble_pin():
+    """Padding two pure-bubble ticks onto the end changes the compiled
+    bubble away from the priced bubble_fraction -> SCH008."""
+    pr = compile_schedule("gpipe", 4, 6)
+    pad = 2
+    z = lambda a, fill: np.concatenate(
+        [a, np.full((pad,) + a.shape[1:], fill, a.dtype)])
+    stretched = dataclasses.replace(
+        pr, n_ticks=pr.n_ticks + pad, mb_index=z(pr.mb_index, 0),
+        chunk_index=z(pr.chunk_index, 0), valid=z(pr.valid, False),
+        loss_valid=z(pr.loss_valid, False), phase=z(pr.phase, 0))
+    assert "SCH008" in error_rules(stretched)
+
+
+# ---------------------------------------------------------------------------
+# compile_schedule(validate=True): the verifier as a compiler post-condition
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name,P,m,V",
+                         [("gpipe", 4, 6, 1), ("1f1b", 4, 8, 1),
+                          ("1f1b-interleaved", 4, 8, 2), ("zb-h1", 4, 8, 1)])
+def test_compile_validate_passes_on_legal_combos(name, P, m, V):
+    pr = compile_schedule(name, P, m, V if V > 1 else None, validate=True)
+    assert pr.n_stages == P
+
+
+def test_compile_validate_rejects_priced_drift():
+    """Combos the optimizer would never propose (ragged interleaved
+    groups, zb-h1 with m < P) compile, but their bubble diverges from the
+    priced bubble_fraction — validate=True surfaces that as a structured
+    DiagnosticError instead of an executable-but-mispriced program."""
+    with pytest.raises(DiagnosticError) as ei:
+        compile_schedule("1f1b-interleaved", 4, 6, 2, validate=True)
+    assert "SCH008" in ei.value.rules()
+    with pytest.raises(DiagnosticError) as ei:
+        compile_schedule("zb-h1", 4, 2, validate=True)
+    assert "SCH008" in ei.value.rules()
+    # DiagnosticError is a ValueError: existing except-ValueError callers
+    # keep working
+    assert issubclass(DiagnosticError, ValueError)
+
+
+def test_verify_program_emits_certification_telemetry():
+    pr = compile_schedule("zb-h1", 4, 8)
+    report = certify_program(pr)
+    assert report.ok
+    infos = [d for d in report.diagnostics if d.severity == "info"]
+    assert any(d.rule == "SCH007" for d in infos)    # liveness numbers
+    assert any(d.rule == "SCH008" for d in infos)    # bubble pin
