@@ -1,0 +1,222 @@
+"""Benchmark the cluster-scale search engine against the PR-4 baseline.
+
+The PR-4 thread-pool sweep (``parallel=True``) fans every (B, P) outer
+candidate of the configured grid eagerly — including everything past the
+per-budget two-consecutive-OOM stopping point.  This benchmark times a
+full batch x PP x schedule sweep in that baseline mode and in the new
+engine modes (``search_backend`` x ``prune_batch_axis``):
+
+  * **threads (PR-4 baseline)** — eager thread-pool fan-out of the whole
+    candidate grid;
+  * **vectorized + prune** — each partition's stage DPs batched into one
+    stacked NumPy evaluation, frontier-guided pruning skipping (B, P)
+    candidates whose certified optimistic bound is dominated or provably
+    over-budget;
+  * **processes + prune** — process-pool fan-out of the surviving
+    candidates.
+
+Every engine mode must return plans *byte-identical* to the serial oracle
+(``ParallelPlan.canonical_dumps``) — any divergence fails the benchmark
+(exit 1) — and the pruned modes must report nonzero skip counts.  A
+candidate-count scaling curve (prefixes of the linear Alg. 1 grid) shows
+the baseline growing linearly with the grid while the pruned engine
+flattens once the feasible region is exhausted.
+
+Results land in ``BENCH_scale.json`` at the repo root.
+
+Usage:  PYTHONPATH=src python benchmarks/bench_scale.py [--smoke] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+from repro.core import GalvatronOptimizer, OptimizerConfig, paper_8gpu
+
+try:
+    from benchmarks.common import bert_huge_like
+except ImportError:          # invoked as a plain script
+    from common import bert_huge_like
+
+GB = 1024 ** 3
+REPO = pathlib.Path(__file__).resolve().parent.parent
+
+#: engine modes timed against the serial oracle; "threads" is the PR-4
+#: eager thread-pool baseline the speedup is quoted against
+MODES = (
+    ("threads", dict(backend="threads", prune=False)),
+    ("vectorized+prune", dict(backend="vectorized", prune=True)),
+    ("processes+prune", dict(backend="processes", prune=True)),
+)
+
+
+def bench_configs(smoke: bool):
+    """(name, specs, budgets, grid, cfg-tweaks) benchmark settings."""
+    if smoke:
+        return [(
+            "linear-grid-8L-8dev",
+            bert_huge_like(8),
+            [2.0 * GB, 3.0 * GB],
+            list(range(8, 129, 8)),
+            dict(micro_candidates=2),
+        )]
+    return [
+        # paper Alg. 1 linear batch grid (B += 8): the feasible region ends
+        # early, the eager baseline grinds the whole grid anyway
+        (
+            "linear-grid-32L-8dev",
+            bert_huge_like(32),
+            [2.0 * GB, 2.6 * GB, 3.4 * GB],
+            list(range(8, 513, 8)),
+            dict(micro_candidates=3),
+        ),
+        # geometric grid with the engine-default micro-batch axis: feasible
+        # throughout, pruning certifies away the over-budget candidates
+        (
+            "geometric-grid-32L-8dev",
+            bert_huge_like(32),
+            [2.0 * GB, 2.6 * GB, 3.4 * GB],
+            None,                       # default_batch_grid(max_batch)
+            dict(max_batch=65536),
+        ),
+    ]
+
+
+def run_once(specs, budgets, grid, tweaks, *, backend, prune,
+             parallel=False):
+    cfg = OptimizerConfig(
+        batch_grid=grid, allow_ckpt=False,
+        schedules=("1f1b", "gpipe", "zb-h1", "1f1b-interleaved"),
+        search_backend=backend, prune_batch_axis=prune)
+    for k, v in tweaks.items():
+        setattr(cfg, k, v)
+    opt = GalvatronOptimizer(specs, paper_8gpu(), cfg)
+    t0 = time.perf_counter()
+    frontier = opt.sweep_budgets(budgets, parallel=parallel)
+    dt = time.perf_counter() - t0
+    dumps = [p.plan.canonical_dumps() if p.plan is not None else None
+             for p in frontier.points]
+    return dumps, dt, dict(opt.stats)
+
+
+def scaling_curve(smoke: bool):
+    """Wall-clock vs candidate count: prefixes of the linear Alg. 1 grid."""
+    specs = bert_huge_like(8 if smoke else 16)
+    budgets = [2.0 * GB, 3.0 * GB]
+    lengths = (4, 8, 16) if smoke else (8, 16, 32, 64)
+    curve = []
+    for n in lengths:
+        grid = list(range(8, 8 * n + 1, 8))
+        point = {"grid_points": n}
+        base, t_ser, _ = run_once(specs, budgets, grid, {},
+                                  backend="serial", prune=False)
+        point["serial_seconds"] = round(t_ser, 4)
+        for name, mode in (("threads", dict(backend="threads", prune=False)),
+                           ("vectorized+prune",
+                            dict(backend="vectorized", prune=True))):
+            dumps, t, stats = run_once(specs, budgets, grid, {}, **mode)
+            if dumps != base:
+                print(f"ERROR: scaling curve n={n} {name}: plans diverged "
+                      "from serial", file=sys.stderr)
+                return None
+            point[f"{name}_seconds"] = round(t, 4)
+            if mode["prune"]:
+                point["pruned_candidates"] = int(
+                    stats["bp_pruned_infeasible"]
+                    + stats["bp_pruned_dominated"] - stats["bp_forced"])
+        curve.append(point)
+        print(f"scaling n={n:3d}: serial {point['serial_seconds']:.3f}s  "
+              f"threads {point['threads_seconds']:.3f}s  "
+              f"vectorized+prune {point['vectorized+prune_seconds']:.3f}s")
+    return curve
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="single small config + short curve (CI)")
+    ap.add_argument("--repeats", type=int, default=1,
+                    help="timed repetitions per mode (min is reported)")
+    ap.add_argument("--out", default=str(REPO / "BENCH_scale.json"))
+    args = ap.parse_args(argv)
+
+    results = {}
+    headline = 0.0
+    for name, specs, budgets, grid, tweaks in bench_configs(args.smoke):
+        base, t_ser, _ = run_once(specs, budgets, grid, tweaks,
+                                  backend="serial", prune=False)
+        for _ in range(args.repeats - 1):
+            _, t, _ = run_once(specs, budgets, grid, tweaks,
+                               backend="serial", prune=False)
+            t_ser = min(t_ser, t)
+        row = {
+            "n_layers": len(specs),
+            "budgets_gb": [round(b / GB, 2) for b in budgets],
+            "grid_points": len(grid) if grid else "default",
+            "feasible": [d is not None for d in base],
+            "serial_seconds": round(t_ser, 4),
+            "modes": {},
+        }
+        t_baseline = None
+        for mode_name, mode in MODES:
+            t_mode = float("inf")
+            dumps, stats = None, {}
+            for _ in range(max(1, args.repeats)):
+                dumps, t, stats = run_once(specs, budgets, grid, tweaks,
+                                           **mode)
+                t_mode = min(t_mode, t)
+            identical = dumps == base
+            skipped = int(stats["bp_pruned_infeasible"]
+                          + stats["bp_pruned_dominated"]
+                          - stats["bp_forced"])
+            entry = {
+                "seconds": round(t_mode, 4),
+                "identical_to_serial": bool(identical),
+                "pruned_infeasible": int(stats["bp_pruned_infeasible"]),
+                "pruned_dominated": int(stats["bp_pruned_dominated"]),
+                "forced": int(stats["bp_forced"]),
+                "candidates": int(stats["bp_candidates"]),
+                "stage_cache_hits": int(stats["stage_cache_hits"]),
+                "stage_cache_misses": int(stats["stage_cache_misses"]),
+            }
+            if mode_name == "threads":
+                t_baseline = t_mode
+            else:
+                speedup = (t_baseline / t_mode if t_mode > 0
+                           else float("inf"))
+                entry["speedup_vs_pr4_threads"] = round(speedup, 2)
+                headline = max(headline, speedup)
+                if mode["prune"] and skipped <= 0:
+                    print(f"WARNING: {name} {mode_name}: pruning skipped "
+                          "no candidates", file=sys.stderr)
+            row["modes"][mode_name] = entry
+            print(f"{name} {mode_name}: {t_mode:.3f}s  "
+                  f"identical={identical}  pruned={skipped}")
+            if not identical:
+                print(f"ERROR: {name} {mode_name}: plans diverged from the "
+                      "serial oracle", file=sys.stderr)
+                return 1
+        results[name] = row
+
+    curve = scaling_curve(args.smoke)
+    if curve is None:
+        return 1
+
+    out = {
+        "benchmark": "cluster-scale sweep (backend fan-out + frontier-"
+                     "guided batch-axis pruning) vs PR-4 eager thread pool",
+        "smoke": args.smoke,
+        "headline_speedup": round(headline, 2),
+        "configs": results,
+        "scaling_curve": curve,
+    }
+    pathlib.Path(args.out).write_text(json.dumps(out, indent=2) + "\n")
+    print(f"wrote {args.out}  (headline speedup {headline:.1f}x)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

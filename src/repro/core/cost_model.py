@@ -21,13 +21,20 @@ Communication volume factors follow §III-A2:
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from .hardware import ClusterSpec
 from .layerspec import LayerSpec
 from .strategy import DP, SDP, TP, Strategy
+
+# which profiled collective prices which paradigm's traffic
+_PARADIGM_COLLECTIVE = {
+    TP: "all_reduce",        # activation all-reduce (fwd + bwd)
+    DP: "all_reduce",        # gradient all-reduce
+    SDP: "all_gather",       # param all-gather (reduce-scatter priced apart)
+}
 
 
 # --------------------------------------------------------------------------
@@ -162,12 +169,35 @@ class CostModel:
         self.cfg = config or CostModelConfig()
         # {layer name: measured forward seconds/sample} — paper §V profiling
         self.profiled_times = profiled_times or {}
+        # (kind, group_size) -> (latency_s, bandwidth); tiny, but sits on
+        # the per-(layer, strategy) hot path.  Part of the clear_cache()
+        # contract: GalvatronOptimizer.clear_cache() calls clear_cache()
+        # here too so swapping cluster profiles under a live instance
+        # cannot serve stale coefficients.
+        self._coeff_cache: Dict[Tuple[str, int], Tuple[float, float]] = {}
+
+    def clear_cache(self) -> None:
+        """Drop the collective-coefficient memo (profiled-constants cache)."""
+        self._coeff_cache.clear()
 
     # ------------------------------------------------------------------
     # helpers
     # ------------------------------------------------------------------
-    def _level_bandwidth(self, strat: Strategy, paradigm: str) -> float:
-        """Bandwidth of the device group a paradigm's collective spans.
+    def _group_coeffs(self, kind: str, group_size: int) -> Tuple[float, float]:
+        """Memoized ``ClusterSpec.collective_coeffs`` (``group_size == -1``
+        selects the pipeline hand-off pair, ``ClusterSpec.p2p_coeffs``)."""
+        key = (kind, group_size)
+        out = self._coeff_cache.get(key)
+        if out is None:
+            if group_size == -1:
+                out = self.cluster.p2p_coeffs()
+            else:
+                out = self.cluster.collective_coeffs(kind, group_size)
+            self._coeff_cache[key] = out
+        return out
+
+    def _level_span(self, strat: Strategy, paradigm: str) -> int:
+        """Device-group size a paradigm's collective spans (1 if absent).
 
         Levels are ordered outer→inner; a level's collective runs between
         device blocks of size = product of inner degrees, so its *span* is
@@ -178,8 +208,20 @@ class CostModel:
         for p, k in reversed(strat.levels):
             span *= k
             if p == paradigm:
-                return self.cluster.bandwidth_for_group(span)
-        return self.cluster.bandwidth_for_group(1)
+                return span
+        return 1
+
+    def _level_coeffs(self, strat: Strategy, paradigm: str,
+                      kind: Optional[str] = None) -> Tuple[float, float]:
+        """(latency_s, bandwidth) for a paradigm's collective under this
+        strategy — profiled when the cluster carries measurements for
+        ``kind`` and the group fits in an island, analytic otherwise."""
+        return self._group_coeffs(kind or _PARADIGM_COLLECTIVE[paradigm],
+                                  self._level_span(strat, paradigm))
+
+    def _level_bandwidth(self, strat: Strategy, paradigm: str) -> float:
+        """Bandwidth of the device group a paradigm's collective spans."""
+        return self._level_coeffs(strat, paradigm)[1]
 
     @staticmethod
     def _ring_factor(n: int) -> float:
@@ -235,17 +277,21 @@ class CostModel:
         recompute = comp_fwd if strat.ckpt else 0.0
 
         # ---- communication ---------------------------------------------
+        # Each collective is charged latency + bytes/bandwidth; with no
+        # profiles attached the latency is exactly 0.0 and the bandwidth the
+        # analytic one, so the pre-profiling numbers are reproduced ulp-for-
+        # ulp (0.0 + x == x in IEEE arithmetic).
         # TP: all-reduce of hidden states, twice per layer direction
         tp_time_fwd = tp_time_bwd = 0.0
         if tp > 1:
-            bw = self._level_bandwidth(strat, TP)
+            lat, bw = self._level_coeffs(strat, TP)
             msg = spec.bnd_bytes_per_sample * b_dev
-            ar = 2.0 * self._ring_factor(tp) * msg / bw
+            ar = lat + 2.0 * self._ring_factor(tp) * msg / bw
             tp_time_fwd = 2.0 * ar
             tp_time_bwd = 2.0 * ar
             if spec.n_experts > 1 and cfg.moe_expert_parallel_tp:
                 # token dispatch + combine all-to-all (fwd and bwd)
-                a2a = 2.0 * self._ring_factor(tp) / tp * msg * spec.top_k / bw
+                a2a = lat + 2.0 * self._ring_factor(tp) / tp * msg * spec.top_k / bw
                 tp_time_fwd += 2.0 * a2a
                 tp_time_bwd += 2.0 * a2a
 
@@ -253,11 +299,12 @@ class CostModel:
         # grad reduce-scatter with the last micro-batch.
         sdp_ag_fwd = sdp_ag_bwd = sdp_rs = 0.0
         if sdp > 1:
-            bw = self._level_bandwidth(strat, SDP)
+            lat_ag, bw_ag = self._level_coeffs(strat, SDP, "all_gather")
+            lat_rs, bw_rs = self._level_coeffs(strat, SDP, "reduce_scatter")
             pbytes = cfg.bytes_per_param * params_dev  # already TP-sharded
-            sdp_ag_fwd = self._ring_factor(sdp) * pbytes / bw
-            sdp_ag_bwd = self._ring_factor(sdp) * pbytes / bw
-            sdp_rs = self._ring_factor(sdp) * pbytes / bw
+            sdp_ag_fwd = lat_ag + self._ring_factor(sdp) * pbytes / bw_ag
+            sdp_ag_bwd = lat_ag + self._ring_factor(sdp) * pbytes / bw_ag
+            sdp_rs = lat_rs + self._ring_factor(sdp) * pbytes / bw_rs
 
         # DP: grad all-reduce with the last micro-batch only.  Per the
         # paper's Takeaway-#3 accounting, DP synchronizes the FULL
@@ -265,9 +312,9 @@ class CostModel:
         # gradients before any ZeRO reduce-scatter, so no /sdp here.
         dp_ar = 0.0
         if dp > 1:
-            bw = self._level_bandwidth(strat, DP)
+            lat, bw = self._level_coeffs(strat, DP)
             gbytes = cfg.bytes_per_param * params_dev
-            dp_ar = 2.0 * self._ring_factor(dp) * gbytes / bw
+            dp_ar = lat + 2.0 * self._ring_factor(dp) * gbytes / bw
 
         # ---- assemble (overlap model, §V) -------------------------------
         # forward: TP all-reduce blocks; SDP gather overlaps with compute
@@ -315,11 +362,22 @@ class CostModel:
         tp = np.array([s.tp for s in strategies], float)
         total = np.array([s.total for s in strategies], float)
         ckpt = np.array([s.ckpt for s in strategies], bool)
-        bw_tp = np.array([self._level_bandwidth(s, TP) for s in strategies])
-        bw_sdp = np.array([self._level_bandwidth(s, SDP) for s in strategies])
-        bw_dp = np.array([self._level_bandwidth(s, DP) for s in strategies])
-        bw_tot = np.array([self.cluster.bandwidth_for_group(int(s.total))
-                           for s in strategies])
+        co = lambda pairs, i: np.array([p[i] for p in pairs])
+        c_tp = [self._level_coeffs(s, TP) for s in strategies]
+        c_ag = [self._level_coeffs(s, SDP, "all_gather") for s in strategies]
+        c_rs = [self._level_coeffs(s, SDP, "reduce_scatter") for s in strategies]
+        c_dp = [self._level_coeffs(s, DP) for s in strategies]
+        c_tot = [self._group_coeffs("all_gather", int(s.total))
+                 for s in strategies]
+        bw_tp, bw_ag, bw_rs = co(c_tp, 1), co(c_ag, 1), co(c_rs, 1)
+        bw_dp, bw_tot = co(c_dp, 1), co(c_tot, 1)
+        # latency enters only where the paradigm is actually active — the
+        # scalar path guards each comm term behind ``if deg > 1``
+        lat_tp = np.where(tp > 1, co(c_tp, 0), 0.0)
+        lat_ag = np.where(sdp > 1, co(c_ag, 0), 0.0)
+        lat_rs = np.where(sdp > 1, co(c_rs, 0), 0.0)
+        lat_dp = np.where(dp > 1, co(c_dp, 0), 0.0)
+        lat_tot = np.where(total > 1, co(c_tot, 0), 0.0)
         ring_tp = np.where(tp > 1, (tp - 1) / tp, 0.0)
         ring_sdp = np.where(sdp > 1, (sdp - 1) / sdp, 0.0)
         ring_dp = np.where(dp > 1, (dp - 1) / dp, 0.0)
@@ -359,15 +417,19 @@ class CostModel:
         recompute = np.where(ckpt, comp_fwd, 0.0)
 
         # ---- communication --------------------------------------------
-        ar = 2.0 * ring_tp * bnd_dev / bw_tp
+        # latency + bytes/bandwidth per collective, mirroring the scalar
+        # path; lat_* is exactly 0.0 wherever a paradigm is inactive or no
+        # profile is attached, so 0.0 + x keeps unprofiled results ulp-equal
+        ar = lat_tp + 2.0 * ring_tp * bnd_dev / bw_tp
         tp_time = 2.0 * ar                                # fwd == bwd
         if cfg.moe_expert_parallel_tp:
-            a2a = 2.0 * ring_tp / tp * bnd_dev * top_k / bw_tp
+            a2a = lat_tp + 2.0 * ring_tp / tp * bnd_dev * top_k / bw_tp
             tp_time = np.where(moe, tp_time + 2.0 * a2a, tp_time)
 
         pbytes = cfg.bytes_per_param * params_dev
-        sdp_ag = ring_sdp * pbytes / bw_sdp               # ag_fwd == ag_bwd == rs
-        dp_ar = 2.0 * ring_dp * pbytes / bw_dp
+        sdp_ag = lat_ag + ring_sdp * pbytes / bw_ag       # ag_fwd == ag_bwd
+        sdp_rs = lat_rs + ring_sdp * pbytes / bw_rs
+        dp_ar = lat_dp + 2.0 * ring_dp * pbytes / bw_dp
 
         # ---- assemble (overlap model, §V) ------------------------------
         sd = dev.overlap_slowdown
@@ -380,10 +442,10 @@ class CostModel:
         fwd = overlap(comp_fwd, sdp_ag) + tp_time
         re_fwd = np.where(ckpt, recompute + tp_time, 0.0)
         bwd_nosync = overlap(comp_bwd, sdp_ag) + tp_time
-        bwd_sync = overlap(comp_bwd, sdp_ag + sdp_ag + dp_ar) + tp_time
+        bwd_sync = overlap(comp_bwd, sdp_ag + sdp_rs + dp_ar) + tp_time
 
         # ---- reshard (layout-transformation) cost ----------------------
-        reshard = 2.0 * ring_tot * (bnd * micro_batch_size / total) / bw_tot
+        reshard = lat_tot + 2.0 * ring_tot * (bnd * micro_batch_size / total) / bw_tot
 
         return CostTables(
             time_sync=fwd + re_fwd + bwd_sync,
@@ -430,13 +492,19 @@ class CostModel:
         n = strat_to.total
         if n <= 1:
             return 0.0
-        bw = self.cluster.bandwidth_for_group(n)
+        lat, bw = self._group_coeffs("all_gather", n)
         bytes_moved = spec.bnd_bytes_per_sample * micro_batch_size / n
-        return 2.0 * self._ring_factor(n) * bytes_moved / bw
+        return lat + 2.0 * self._ring_factor(n) * bytes_moved / bw
 
     # ------------------------------------------------------------------
     def p2p_cost(self, spec: LayerSpec, micro_batch_size: float,
                  data_deg: int) -> float:
-        """Pipeline stage-boundary activation transfer (per micro-batch)."""
+        """Pipeline stage-boundary activation transfer (per micro-batch).
+
+        Priced from the profiled ``ppermute`` pair when the cluster is a
+        single island and carries one, else the analytic inter-island
+        bandwidth (PP hand-offs cross the slow domain on hierarchical
+        clusters — Takeaway #1)."""
+        lat, bw = self._group_coeffs("ppermute", -1)
         bytes_moved = spec.bnd_bytes_per_sample * micro_batch_size / max(1, data_deg)
-        return bytes_moved / self.cluster.inter_island_bandwidth
+        return lat + bytes_moved / bw

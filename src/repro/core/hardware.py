@@ -10,11 +10,44 @@ on one device), compute is peak dense throughput per chip.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Mapping, Optional, Tuple
 
 GB = 1024**3
 MB = 1024**2
 TFLOPS = 1e12
+
+#: collective kinds the profiler measures and the cost model consumes
+COLLECTIVE_KINDS = ("all_reduce", "all_gather", "reduce_scatter", "ppermute")
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveProfile:
+    """Measured latency/bandwidth pair of one collective kind.
+
+    Produced by ``core/profiler.py::profile_collectives`` from on-device
+    microbenchmarks (a linear fit ``t = latency_s + bytes / bus_bandwidth``
+    over several message sizes) and consumed by the cost model through
+    :meth:`ClusterSpec.collective_coeffs`.  ``bus_bandwidth`` is the
+    *algorithmic* bytes/s seen by one device (same convention as the
+    analytic ``intra_island_bandwidth``), so a profiled and an analytic
+    constant drop into the same cost-model formulas.
+    """
+
+    latency_s: float                 # fixed per-invocation cost, seconds
+    bus_bandwidth: float             # algorithmic bytes/s per device
+    n_samples: int = 0               # message sizes the fit saw
+
+    def to_json(self) -> Dict:
+        return {"latency_s": self.latency_s,
+                "bus_bandwidth": self.bus_bandwidth,
+                "n_samples": self.n_samples}
+
+    @staticmethod
+    def from_json(d: Mapping) -> "CollectiveProfile":
+        return CollectiveProfile(
+            latency_s=float(d["latency_s"]),
+            bus_bandwidth=float(d["bus_bandwidth"]),
+            n_samples=int(d.get("n_samples", 0)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +80,11 @@ class ClusterSpec:
     intra_island_bandwidth: float   # bytes/s per device, fast domain
     inter_island_bandwidth: float   # bytes/s per device, slow domain
     memory_budget: Optional[float] = None  # training budget; default = hbm
+    # Measured collective constants, stored as a sorted tuple of
+    # (kind, CollectiveProfile) pairs so the frozen dataclass stays
+    # hashable.  Build with :meth:`with_profiles`; ``None`` means "analytic
+    # constants only" and reproduces the pre-profiling cost model exactly.
+    collective_profiles: Optional[Tuple[Tuple[str, "CollectiveProfile"], ...]] = None
 
     def budget(self) -> float:
         return self.memory_budget if self.memory_budget is not None else self.device.hbm_bytes
@@ -61,11 +99,58 @@ class ClusterSpec:
             return self.intra_island_bandwidth
         return self.inter_island_bandwidth
 
+    def profiles(self) -> Dict[str, "CollectiveProfile"]:
+        """Profiled collective constants as a plain dict (possibly empty)."""
+        return dict(self.collective_profiles or ())
+
+    def _profile_for(self, kind: str) -> Optional["CollectiveProfile"]:
+        for k, p in (self.collective_profiles or ()):
+            if k == kind:
+                return p
+        return None
+
+    def collective_coeffs(self, kind: str, group_size: int) -> Tuple[float, float]:
+        """``(latency_s, bandwidth)`` the cost model should charge for one
+        ``kind`` collective spanning ``group_size`` devices.
+
+        Profiled constants were measured inside one fast domain, so they
+        apply only to groups that fit in an island; degenerate groups
+        (``group_size <= 1``) and cross-island groups fall back to zero
+        latency and the analytic :meth:`bandwidth_for_group` — with no
+        profiles attached every result is the analytic pair, keeping the
+        cost model byte-identical to the pre-profiling one.
+        """
+        if group_size > 1 and group_size <= self.island_size:
+            p = self._profile_for(kind)
+            if p is not None:
+                return (p.latency_s, p.bus_bandwidth)
+        return (0.0, self.bandwidth_for_group(group_size))
+
+    def p2p_coeffs(self) -> Tuple[float, float]:
+        """``(latency_s, bandwidth)`` for the pipeline hand-off transfer.
+
+        PP boundaries sit on the *slow* domain by construction (Takeaway
+        #1), so a profiled ``ppermute`` — measured inside the fast domain —
+        only applies when the whole cluster is one island.
+        """
+        if self.island_size >= self.n_devices:
+            p = self._profile_for("ppermute")
+            if p is not None:
+                return (p.latency_s, p.bus_bandwidth)
+        return (0.0, self.inter_island_bandwidth)
+
     def with_budget(self, budget_bytes: float) -> "ClusterSpec":
         return dataclasses.replace(self, memory_budget=budget_bytes)
 
     def with_devices(self, n: int) -> "ClusterSpec":
         return dataclasses.replace(self, n_devices=n)
+
+    def with_profiles(self, profiles: Mapping[str, "CollectiveProfile"]) -> "ClusterSpec":
+        """Attach measured collective constants (see ``core/profiler.py``).
+
+        An empty mapping detaches all profiles (back to analytic)."""
+        packed = tuple(sorted(profiles.items())) or None
+        return dataclasses.replace(self, collective_profiles=packed)
 
 
 # --------------------------------------------------------------------------

@@ -9,12 +9,16 @@ which ``CostModel(..., profiled_times=...)`` consumes directly.
 """
 from __future__ import annotations
 
+import json
+import os
+import pathlib
 import time
-from typing import Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
+from .hardware import COLLECTIVE_KINDS, ClusterSpec, CollectiveProfile
 from .layerspec import LayerSpec
 
 
@@ -76,3 +80,142 @@ def profile_layerspecs(specs: Sequence[LayerSpec], *,
             by_flops[key] = t * scale
         out[s.name] = by_flops[key]
     return out
+
+
+# --------------------------------------------------------------------------
+# collective microbenchmarks → latency/bandwidth pairs for the cost model
+# --------------------------------------------------------------------------
+
+def device_fingerprint() -> str:
+    """Stable id of the local accelerator configuration — the JSON-cache key.
+
+    ``backend:device_kind:count``, e.g. ``gpu:NVIDIA-A100-SXM4-40GB:8`` or
+    ``cpu:cpu:1``.  Profiles measured on one fingerprint never leak onto
+    another machine shape."""
+    devs = jax.local_devices()
+    kind = devs[0].device_kind.replace(" ", "-") if devs else "none"
+    return f"{jax.default_backend()}:{kind}:{len(devs)}"
+
+
+def _lstsq_latency_bandwidth(byte_sizes: Sequence[float],
+                             times: Sequence[float]) -> CollectiveProfile:
+    """Least-squares fit of ``t = latency + bytes / bandwidth``.
+
+    Latency is clamped to >= 0 (a negative intercept just means the small
+    messages already saturated the link) and bandwidth to > 0."""
+    import numpy as np
+    x = np.asarray(byte_sizes, float)
+    y = np.asarray(times, float)
+    a = np.stack([np.ones_like(x), x], axis=1)
+    (lat, inv_bw), *_ = np.linalg.lstsq(a, y, rcond=None)
+    if inv_bw <= 0.0:
+        # degenerate fit (timer noise dominates): charge everything to
+        # bandwidth at the mean observed rate
+        inv_bw = float(np.mean(y / np.maximum(x, 1.0)))
+        lat = 0.0
+    return CollectiveProfile(latency_s=max(0.0, float(lat)),
+                             bus_bandwidth=1.0 / float(inv_bw),
+                             n_samples=len(x))
+
+
+def profile_collectives(sizes_mb: Sequence[float] = (1.0, 4.0, 16.0), *,
+                        iters: int = 3) -> Dict[str, CollectiveProfile]:
+    """Measure all-reduce / all-gather / reduce-scatter / ppermute on the
+    local devices and fit a latency-bandwidth pair per kind.
+
+    Returns ``{}`` when fewer than two local devices exist (single-chip
+    hosts and CPU CI have no collective to measure — callers fall back to
+    the analytic constants), so importing and calling this is always safe.
+    """
+    n = jax.local_device_count()
+    if n < 2:
+        return {}
+    axis = "i"
+    perm = [(i, (i + 1) % n) for i in range(n)]
+    ops = {
+        "all_reduce": lambda x: jax.lax.psum(x, axis),
+        "all_gather": lambda x: jax.lax.all_gather(x, axis),
+        "reduce_scatter": lambda x: jax.lax.psum_scatter(
+            x, axis, tiled=True),
+        "ppermute": lambda x: jax.lax.ppermute(x, axis, perm),
+    }
+    out: Dict[str, CollectiveProfile] = {}
+    for kind, op in ops.items():
+        fn = jax.pmap(op, axis_name=axis)
+        byte_sizes: List[float] = []
+        times: List[float] = []
+        for mb in sizes_mb:
+            elems = max(n, int(mb * 2 ** 20 / 4))
+            elems -= elems % n                 # psum_scatter needs n | len
+            x = jnp.ones((n, elems), jnp.float32)
+            times.append(_time_fn(fn, x, iters=iters))
+            byte_sizes.append(elems * 4.0)     # message bytes per device
+        out[kind] = _lstsq_latency_bandwidth(byte_sizes, times)
+    return out
+
+
+def load_collective_profiles(path: Union[str, pathlib.Path]
+                             ) -> Dict[str, Dict[str, CollectiveProfile]]:
+    """Parse a profile cache file: {fingerprint: {kind: profile}}."""
+    raw = json.loads(pathlib.Path(path).read_text())
+    return {fp: {k: CollectiveProfile.from_json(v)
+                 for k, v in kinds.items() if k in COLLECTIVE_KINDS}
+            for fp, kinds in raw.items()}
+
+
+def save_collective_profiles(path: Union[str, pathlib.Path],
+                             by_fingerprint: Dict[str, Dict[str, CollectiveProfile]]
+                             ) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(
+        {fp: {k: prof.to_json() for k, prof in sorted(kinds.items())}
+         for fp, kinds in sorted(by_fingerprint.items())},
+        indent=2, sort_keys=True) + "\n")
+
+
+def default_profile_cache_path() -> pathlib.Path:
+    env = os.environ.get("REPRO_COLLECTIVES_CACHE")
+    if env:
+        return pathlib.Path(env)
+    return pathlib.Path.home() / ".cache" / "repro" / "collectives.json"
+
+
+def cached_collective_profiles(
+        path: Union[str, pathlib.Path, None] = None, *,
+        fingerprint: Optional[str] = None,
+        refresh: bool = False,
+        profile_fn: Optional[Callable[[], Dict[str, CollectiveProfile]]] = None,
+) -> Dict[str, CollectiveProfile]:
+    """Profiled collective constants for this host, via a JSON cache.
+
+    Looks up :func:`device_fingerprint` in the cache at ``path`` (default:
+    ``$REPRO_COLLECTIVES_CACHE`` or ``~/.cache/repro/collectives.json``);
+    on a miss (or ``refresh=True``) runs :func:`profile_collectives` and
+    writes the result through, merging with other fingerprints already in
+    the file.  Returns ``{}`` when nothing could be measured — and caches
+    that too, so single-device hosts don't re-probe every run.
+    """
+    path = pathlib.Path(path) if path is not None else default_profile_cache_path()
+    fp = fingerprint or device_fingerprint()
+    cache: Dict[str, Dict[str, CollectiveProfile]] = {}
+    if path.exists():
+        try:
+            cache = load_collective_profiles(path)
+        except (json.JSONDecodeError, KeyError, TypeError, ValueError):
+            cache = {}                         # corrupt cache: re-measure
+    if not refresh and fp in cache:
+        return dict(cache[fp])
+    measured = (profile_fn or profile_collectives)()
+    cache[fp] = dict(measured)
+    save_collective_profiles(path, cache)
+    return dict(measured)
+
+
+def profiled_cluster(cluster: ClusterSpec,
+                     path: Union[str, pathlib.Path, None] = None, *,
+                     refresh: bool = False) -> ClusterSpec:
+    """``cluster`` with this host's measured collective constants attached
+    (unchanged when nothing could be measured)."""
+    profiles = cached_collective_profiles(path, refresh=refresh)
+    return cluster.with_profiles(profiles) if profiles else cluster

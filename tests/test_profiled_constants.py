@@ -1,0 +1,176 @@
+"""Profiled cost-model constants: collective microbenchmark profiles attach
+to a ClusterSpec, route through the cost model identically in the scalar and
+vectorized paths, and persist in a per-fingerprint JSON cache."""
+import json
+
+import pytest
+
+from repro.core import (CollectiveProfile, CostModel, enumerate_strategies,
+                        paper_8gpu, paper_16gpu_low)
+from repro.core.hardware import COLLECTIVE_KINDS
+from repro.core.layerspec import dense_layer, head_layer
+from repro.core.profiler import (cached_collective_profiles,
+                                 default_profile_cache_path,
+                                 load_collective_profiles,
+                                 profile_collectives,
+                                 save_collective_profiles)
+
+GB = 1024 ** 3
+
+PROFILES = {
+    "all_reduce": CollectiveProfile(latency_s=25e-6, bus_bandwidth=180e9,
+                                    n_samples=3),
+    "ppermute": CollectiveProfile(latency_s=8e-6, bus_bandwidth=220e9,
+                                  n_samples=3),
+}
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec.with_profiles / coefficient selection
+# ---------------------------------------------------------------------------
+
+def test_with_profiles_roundtrip_and_selection():
+    cluster = paper_8gpu()
+    prof = cluster.with_profiles(PROFILES)
+    assert prof.profiles() == PROFILES
+    assert cluster.profiles() == {}             # original untouched (frozen)
+    # in-island group of a profiled kind: the measured pair
+    lat, bw = prof.collective_coeffs("all_reduce", 4)
+    assert (lat, bw) == (25e-6, 180e9)
+    # unprofiled kind, degenerate group, cross-island group: analytic
+    assert prof.collective_coeffs("all_gather", 4) \
+        == (0.0, cluster.bandwidth_for_group(4))
+    assert prof.collective_coeffs("all_reduce", 1) \
+        == (0.0, cluster.bandwidth_for_group(1))
+    big = prof.island_size * 2
+    assert prof.collective_coeffs("all_reduce", big) \
+        == (0.0, cluster.bandwidth_for_group(big))
+
+
+def test_no_profiles_is_analytic_identity():
+    cluster = paper_16gpu_low()
+    for kind in COLLECTIVE_KINDS:
+        for g in (1, 2, 8, 16):
+            assert cluster.collective_coeffs(kind, g) \
+                == (0.0, cluster.bandwidth_for_group(g))
+
+
+# ---------------------------------------------------------------------------
+# scalar vs vectorized cost tables under latency profiles
+# ---------------------------------------------------------------------------
+
+def test_tables_match_scalar_with_latency_profiles():
+    """The profiled latency terms must hit the vectorized table builder and
+    the scalar ``layer_costs`` identically — the byte-identity chain from
+    backends down to costs rests on this."""
+    cluster = paper_8gpu().with_profiles(PROFILES)
+    cm = CostModel(cluster)
+    specs = [dense_layer(f"l{i}", 256, 512, 8, 8, 2048,
+                         store_attn_matrix=bool(i % 2)) for i in range(4)]
+    specs.append(head_layer("head", 256, 512, 32000))
+    strategies = enumerate_strategies(8)
+    for inflight in (1, 3):
+        tb = cm.layer_cost_tables(specs, strategies, 8.0, inflight=inflight)
+        for l, sp in enumerate(specs):
+            for j, s in enumerate(strategies):
+                c = cm.layer_costs(sp, s, 8.0, inflight=inflight)
+                assert tb.time_sync[l, j] == pytest.approx(c.time, rel=1e-9)
+                assert tb.time_nosync[l, j] == pytest.approx(
+                    c.time_nosync, rel=1e-9)
+                assert tb.mem_ms[l, j] == pytest.approx(c.mem_ms, rel=1e-9)
+
+
+def test_profiles_change_costs():
+    """Sanity: a profile with real latency/bandwidth actually shifts the
+    predicted communication time (the wiring is not dead)."""
+    spec = dense_layer("l0", 512, 1024, 16, 16, 4096)
+    base = CostModel(paper_8gpu())
+    slow = CostModel(paper_8gpu().with_profiles({
+        "all_reduce": CollectiveProfile(latency_s=5e-3, bus_bandwidth=1e9)}))
+    strategies = enumerate_strategies(4)
+    tp = next(s for s in strategies if s.tp > 1)
+    assert slow.layer_costs(spec, tp, 8.0).time \
+        > base.layer_costs(spec, tp, 8.0).time
+
+
+# ---------------------------------------------------------------------------
+# JSON cache
+# ---------------------------------------------------------------------------
+
+def test_cache_miss_measures_and_writes(tmp_path):
+    path = tmp_path / "collectives.json"
+    calls = []
+
+    def fake_profile():
+        calls.append(1)
+        return dict(PROFILES)
+
+    got = cached_collective_profiles(path, fingerprint="test:fake:8",
+                                     profile_fn=fake_profile)
+    assert got == PROFILES and len(calls) == 1
+    # hit: served from disk, the profiler is NOT re-run
+    again = cached_collective_profiles(
+        path, fingerprint="test:fake:8",
+        profile_fn=lambda: pytest.fail("cache hit must not re-profile"))
+    assert again == PROFILES
+    # refresh: forced re-measure overwrites the entry
+    newer = {"all_reduce": CollectiveProfile(1e-6, 300e9, 5)}
+    got = cached_collective_profiles(path, fingerprint="test:fake:8",
+                                     refresh=True, profile_fn=lambda: newer)
+    assert got == newer
+    assert load_collective_profiles(path)["test:fake:8"] == newer
+
+
+def test_cache_merges_fingerprints(tmp_path):
+    path = tmp_path / "collectives.json"
+    save_collective_profiles(path, {"other:machine:4": PROFILES})
+    cached_collective_profiles(path, fingerprint="this:machine:8",
+                               profile_fn=lambda: dict(PROFILES))
+    on_disk = load_collective_profiles(path)
+    assert set(on_disk) == {"other:machine:4", "this:machine:8"}
+
+
+def test_cache_caches_empty_measurement(tmp_path):
+    """Single-device hosts measure {} — cached too, so they don't re-probe
+    on every run."""
+    path = tmp_path / "collectives.json"
+    assert cached_collective_profiles(path, fingerprint="cpu:cpu:1",
+                                      profile_fn=lambda: {}) == {}
+    assert cached_collective_profiles(
+        path, fingerprint="cpu:cpu:1",
+        profile_fn=lambda: pytest.fail("empty result must be cached")) == {}
+
+
+def test_corrupt_cache_remeasures(tmp_path):
+    path = tmp_path / "collectives.json"
+    path.write_text("{not json")
+    got = cached_collective_profiles(path, fingerprint="test:fake:8",
+                                     profile_fn=lambda: dict(PROFILES))
+    assert got == PROFILES
+    assert load_collective_profiles(path)["test:fake:8"] == PROFILES
+
+
+def test_default_cache_path_env(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_COLLECTIVES_CACHE", str(tmp_path / "c.json"))
+    assert default_profile_cache_path() == tmp_path / "c.json"
+
+
+def test_profile_collectives_safe_on_single_device():
+    """CPU CI has one device: the microbenchmark degrades to {} instead of
+    crashing (callers keep the analytic constants)."""
+    import jax
+    if jax.local_device_count() >= 2:
+        pytest.skip("multi-device host: collectives are measurable")
+    assert profile_collectives() == {}
+
+
+def test_profile_json_roundtrip(tmp_path):
+    path = tmp_path / "collectives.json"
+    save_collective_profiles(path, {"fp:x:2": PROFILES})
+    loaded = load_collective_profiles(path)["fp:x:2"]
+    assert loaded == PROFILES
+    # unknown kinds in the file are dropped, known fields survive verbatim
+    raw = json.loads(path.read_text())
+    raw["fp:x:2"]["bogus_collective"] = {"latency_s": 1, "bus_bandwidth": 1}
+    path.write_text(json.dumps(raw))
+    assert set(load_collective_profiles(path)["fp:x:2"]) == set(PROFILES)

@@ -1,0 +1,177 @@
+"""Cluster-scale engine invariants: every execution backend (threads /
+processes / vectorized) and the frontier-guided batch-axis pruner must be a
+pure speedup — plans byte-identical to the serial oracle, telemetry
+consistent, caches auditable."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:          # deterministic fallback sampler
+    from _hypothesis_compat import given, settings, st
+
+from repro.core import (GalvatronOptimizer, OptimizerConfig, SEARCH_BACKENDS,
+                        galvatron_variant, normalize_batch_grid, paper_8gpu)
+from repro.core.layerspec import dense_layer
+
+GB = 1024 ** 3
+
+
+def _specs(n=8, seq=512, d=1024):
+    return [dense_layer(f"l{i}", seq, d, 16, 16, 4 * d,
+                        store_attn_matrix=True) for i in range(n)]
+
+
+def _cfg(**kw):
+    cfg = galvatron_variant("bmw")
+    cfg.batch_grid = [8, 16, 24, 32]
+    cfg.n_bins = 128
+    cfg.micro_candidates = 2
+    cfg.schedules = ("1f1b", "zb-h1")
+    for k, v in kw.items():
+        setattr(cfg, k, v)
+    return cfg
+
+
+def _sweep(budgets, **kw):
+    opt = GalvatronOptimizer(_specs(), paper_8gpu(), _cfg(**kw))
+    frontier = opt.sweep_budgets(budgets)
+    dumps = [p.plan.canonical_dumps() if p.plan is not None else None
+             for p in frontier.points]
+    return dumps, dict(opt.stats), opt
+
+
+BUDGETS = [2.0 * GB, 4.0 * GB, 8.0 * GB]
+
+
+# ---------------------------------------------------------------------------
+# differential: every backend x pruning == serial oracle, byte for byte
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["threads", "processes", "vectorized"])
+@pytest.mark.parametrize("prune", [False, True])
+def test_backend_byte_identical_to_serial(backend, prune):
+    base, _, _ = _sweep(BUDGETS)
+    dumps, stats, _ = _sweep(BUDGETS, search_backend=backend,
+                             prune_batch_axis=prune, jobs=2)
+    assert dumps == base
+    assert any(d is not None for d in base)     # sweep is non-degenerate
+    assert stats["stage_cache_hits"] + stats["stage_cache_misses"] \
+        == stats["stage_searches"]
+
+
+def test_serial_pruned_identical_with_skips():
+    """Pruning alone (no pool): identical frontier, nonzero skip counts on a
+    sweep whose low budget is infeasible for the large batch sizes."""
+    budgets = [1.2 * GB, 2.0 * GB, 4.0 * GB]
+    base, base_stats, _ = _sweep(budgets, allow_ckpt=False)
+    dumps, stats, _ = _sweep(budgets, allow_ckpt=False, prune_batch_axis=True)
+    assert dumps == base
+    pruned = (stats["bp_pruned_infeasible"] + stats["bp_pruned_dominated"]
+              - stats["bp_forced"])
+    assert pruned > 0
+    # skipping must actually save inner DP work vs the unpruned serial run
+    assert stats["stage_searches"] < base_stats["stage_searches"]
+    assert stats["bound_evals"] > 0
+    assert stats["bp_candidates"] == base_stats["bp_candidates"]
+
+
+def test_two_oom_stop_trajectory_preserved():
+    """Tight budgets where the batch axis hits the two-consecutive-OOM stop:
+    the pruner must reproduce the serial stopping point exactly (forced runs
+    exist for precisely this bookkeeping)."""
+    budgets = [1.0 * GB, 1.6 * GB]
+    base, _, _ = _sweep(budgets, allow_ckpt=False,
+                        batch_grid=[8, 16, 32, 64, 128, 256])
+    for backend in ("serial", "vectorized"):
+        dumps, stats, _ = _sweep(budgets, allow_ckpt=False,
+                                 batch_grid=[8, 16, 32, 64, 128, 256],
+                                 search_backend=backend,
+                                 prune_batch_axis=True)
+        assert dumps == base
+        assert stats["bp_forced"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# property: pruning never drops the argmax-throughput batch size
+# ---------------------------------------------------------------------------
+
+@given(st.sampled_from([(8, 16), (8, 16, 24), (8, 16, 32, 48),
+                        (8, 24, 40, 56, 72)]),
+       st.sampled_from([(1.5, 3.0), (2.0, 4.0, 8.0), (1.2, 1.8, 2.6)]),
+       st.booleans())
+@settings(max_examples=8, deadline=None)
+def test_pruning_keeps_argmax_batch(grid, budgets_gb, allow_ckpt):
+    budgets = [b * GB for b in budgets_gb]
+    base, _, _ = _sweep(budgets, batch_grid=list(grid),
+                        allow_ckpt=allow_ckpt)
+    dumps, _, opt = _sweep(budgets, batch_grid=list(grid),
+                           allow_ckpt=allow_ckpt,
+                           search_backend="vectorized",
+                           prune_batch_axis=True)
+    # byte-identity subsumes it, but assert the paper-level property
+    # directly: per budget, the winning global batch size survives pruning
+    frontier = opt.sweep_budgets(budgets)
+    for d, p in zip(base, frontier.points):
+        if d is None:
+            assert p.plan is None
+        else:
+            assert p.plan is not None
+            assert f'"global_batch": {p.plan.global_batch}' in d
+    assert dumps == base
+
+
+# ---------------------------------------------------------------------------
+# batch_grid / config validation
+# ---------------------------------------------------------------------------
+
+def test_normalize_batch_grid_dedupes_and_sorts():
+    assert normalize_batch_grid([32, 8, 16, 8]) == [8, 16, 32]
+    assert normalize_batch_grid(None) is None
+
+
+@pytest.mark.parametrize("bad", [[], [0], [-8], [8.5], [True], ["8"]])
+def test_normalize_batch_grid_rejects(bad):
+    with pytest.raises(ValueError):
+        normalize_batch_grid(bad)
+
+
+def test_config_normalizes_unsorted_grid():
+    cfg = OptimizerConfig(batch_grid=[64, 8, 8, 16])
+    assert cfg.batch_grid == [8, 16, 64]
+
+
+def test_config_rejects_bad_backend():
+    with pytest.raises(ValueError, match="search_backend"):
+        OptimizerConfig(search_backend="gpu")
+    assert "serial" in SEARCH_BACKENDS
+
+
+def test_config_rejects_vectorized_without_vectorized_cost():
+    with pytest.raises(ValueError, match="vectorized"):
+        OptimizerConfig(search_backend="vectorized", vectorized_cost=False)
+
+
+def test_config_rejects_nonpositive_jobs():
+    with pytest.raises(ValueError, match="jobs"):
+        OptimizerConfig(jobs=0)
+
+
+# ---------------------------------------------------------------------------
+# cache audit: the new caches are registered with clear_cache()
+# ---------------------------------------------------------------------------
+
+def test_clear_cache_covers_bound_and_coeff_caches():
+    _, _, opt = _sweep([1.5 * GB, 3.0 * GB], prune_batch_axis=True)
+    assert opt._bound_cache                     # pruning populated bounds
+    opt.cost._group_coeffs("all_reduce", 4)
+    assert opt.cost._coeff_cache                # coeff lookups memoized
+    opt.clear_cache()
+    assert not opt._bound_cache
+    assert not opt.cost._coeff_cache
+    assert not opt._stage_cache
+    assert all(v == 0 for v in opt.stats.values())
+    # the instance still searches correctly after the wipe
+    base, _, _ = _sweep([1.5 * GB, 3.0 * GB])
+    frontier = opt.sweep_budgets([1.5 * GB, 3.0 * GB])
+    assert [p.plan.canonical_dumps() if p.plan is not None else None
+            for p in frontier.points] == base
