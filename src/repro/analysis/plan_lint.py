@@ -1,5 +1,5 @@
 """Plan verifier: static checks on ``ParallelPlan`` JSON, every format
-version (rule ids ``PLN001``–``PLN009``, catalog in ``docs/analysis.md``).
+version (rule ids ``PLN001``–``PLN010``, catalog in ``docs/analysis.md``).
 
 The search emits a plan; the runtime executes it — possibly in a
 different process, weeks later, from a file somebody hand-edited.  This
@@ -47,10 +47,12 @@ _SINGLE_CHUNK = ("gpipe", "1f1b", "zb-h1")
 
 def detect_format_version(d: Dict) -> int:
     """Infer the format version of a raw plan dict (see core/plan.py):
-    explicit ``format_version`` stamp (v2+), else ``vpp_degree`` implies
-    v1, else v0."""
+    explicit ``format_version`` stamp (v2+), else a non-null ``serving``
+    section implies v3, else ``vpp_degree`` implies v1, else v0."""
     if "format_version" in d:
         return int(d["format_version"])
+    if isinstance(d, dict) and d.get("serving") is not None:
+        return 3
     return 1 if ("vpp_degree" in d or "schedule" in d) else 0
 
 
@@ -126,7 +128,7 @@ def _check_version(d: Dict, loc: str, strict: bool,
             "PLN001", f"{loc}.format_version",
             f"deprecated v{ver} plan (current is v{PLAN_FORMAT_VERSION}): "
             "missing keys are filled with the defaults that version "
-            "implied (schedule='1f1b', vpp_degree=1)"
+            "implied (schedule='1f1b', vpp_degree=1, serving=None)"
             + (" — rejected under --strict" if strict else ""),
             "re-emit with the current search CLI to pin the schedule "
             "explicitly"))
@@ -280,6 +282,66 @@ def verify_plan(plan: ParallelPlan, *, location: str = "plan"
                     "(runtime/sharding.py prices only the send)",
                     "match the data degrees across stage boundaries or "
                     "accept the resharding cost"))
+
+    # --- PLN010: serving section vs mesh/degree arithmetic ----------------
+    sv = plan.serving
+    if sv is not None:
+        sloc = f"{loc}.serving"
+        for phase, tp, pp in (("decode", sv.decode_tp, sv.decode_pp),
+                              ("prefill", sv.prefill_tp, sv.prefill_pp)):
+            if tp < 1 or pp < 1:
+                out.append(error(
+                    "PLN010", f"{sloc}.{phase}_tp",
+                    f"{phase} degrees must be >= 1 (tp={tp}, pp={pp})"))
+            elif n_dev % (tp * pp):
+                out.append(error(
+                    "PLN010", f"{sloc}.{phase}_tp",
+                    f"{phase} tp*pp = {tp * pp} does not divide "
+                    f"n_devices={n_dev}: no serving mesh factorization "
+                    "exists (launch/mesh.py)",
+                    "tp * pp must divide the device count for each phase"))
+        if sv.page_size < 1:
+            out.append(error(
+                "PLN010", f"{sloc}.page_size",
+                f"page_size must be >= 1, got {sv.page_size}"))
+        else:
+            if sv.page_size & (sv.page_size - 1):
+                out.append(warning(
+                    "PLN010", f"{sloc}.page_size",
+                    f"page_size={sv.page_size} is not a power of two: "
+                    "page-index arithmetic compiles to divisions instead "
+                    "of shifts on most backends"))
+            if sv.max_context < 1 or sv.max_context % sv.page_size:
+                out.append(error(
+                    "PLN010", f"{sloc}.max_context",
+                    f"max_context={sv.max_context} must be a positive "
+                    f"multiple of page_size={sv.page_size} (the page "
+                    "table addresses whole pages)"))
+        if sv.decode_batch < 1:
+            out.append(error(
+                "PLN010", f"{sloc}.decode_batch",
+                f"decode_batch must be >= 1, got {sv.decode_batch}"))
+        elif sv.kv_pool_pages and sv.kv_pool_pages < sv.decode_batch:
+            out.append(error(
+                "PLN010", f"{sloc}.kv_pool_pages",
+                f"kv_pool_pages={sv.kv_pool_pages} < decode_batch="
+                f"{sv.decode_batch}: the pool cannot give every decode "
+                "lane even one page, so full-batch decode deadlocks"))
+        if sv.prefill_chunk < 1:
+            out.append(error(
+                "PLN010", f"{sloc}.prefill_chunk",
+                f"prefill_chunk must be >= 1, got {sv.prefill_chunk}"))
+        if sv.slo_ms <= 0:
+            out.append(error(
+                "PLN010", f"{sloc}.slo_ms",
+                f"slo_ms must be > 0, got {sv.slo_ms}"))
+        elif sv.est_tok_ms > sv.slo_ms > 0:
+            out.append(warning(
+                "PLN010", f"{sloc}.est_tok_ms",
+                f"predicted per-token latency ({sv.est_tok_ms:.2f} ms) "
+                f"exceeds the plan's own SLO ({sv.slo_ms:.2f} ms): the "
+                "search emitted a best-effort point, not an SLO-meeting "
+                "one"))
 
     # --- PLN008: estimator self-consistency -------------------------------
     if plan.est_stage_mem is not None and len(plan.est_stage_mem) != P:

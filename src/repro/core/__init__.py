@@ -20,7 +20,8 @@ from .pipeline_balance import (ZB_W_ACT_FRAC, balance_degrees,
                                inflight_microbatches,
                                memory_balanced_partition,
                                time_balanced_partition, zb_w_pending_max)
-from .plan import PLAN_FORMAT_VERSION, ParallelPlan, PlanFormatError
+from .plan import (PLAN_FORMAT_VERSION, ParallelPlan, PlanFormatError,
+                   ServingSection)
 from .strategy import (DP, SDP, TP, Strategy, enumerate_strategies,
                        strategy_set_id)
 

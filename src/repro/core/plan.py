@@ -6,10 +6,15 @@ JSON format versioning (full schema + compat table: docs/plan-format.md):
   * v0 (PR 1) — no ``vpp_degree`` key; ``schedule`` may be absent too.
   * v1 (PR 2) — ``schedule`` + ``vpp_degree`` always present.
   * v2 (PR 5) — ``format_version`` stamp; ``schedule`` may be ``"zb-h1"``.
+  * v3 (PR 8) — optional ``serving`` section (:class:`ServingSection`):
+    the SLO-aware serving search's prefill/decode disaggregation plan
+    (TP/PP per phase, decode batch, paged-KV page size / pool size).
+    ``serving`` may be ``null``/absent — a v3 plan without it is a pure
+    training plan.
 
 ``from_json`` reads every older version (missing keys default to the
-value that version implied: ``schedule="1f1b"``, ``vpp_degree=1``);
-``to_json`` always writes the current version.
+value that version implied: ``schedule="1f1b"``, ``vpp_degree=1``,
+``serving=None``); ``to_json`` always writes the current version.
 """
 from __future__ import annotations
 
@@ -20,7 +25,64 @@ from typing import Dict, List, Optional
 from .strategy import Strategy
 
 #: version stamp written by :meth:`ParallelPlan.to_json` (see module doc)
-PLAN_FORMAT_VERSION = 2
+PLAN_FORMAT_VERSION = 3
+
+
+@dataclasses.dataclass
+class ServingSection:
+    """Optional inference block of a plan (format v3+).
+
+    Emitted by the SLO-aware serving search (``repro.serving.slo_search``)
+    and consumed by ``launch/serve.py --plan``.  Prefill and decode are
+    disaggregated phases with independent TP/PP degrees; the paged KV
+    cache is described by ``page_size`` / ``kv_pool_pages``.  All ``est_*``
+    fields are cost-model predictions, not measurements."""
+
+    slo_ms: float                 # per-decoded-token latency SLO
+    page_size: int                # tokens per KV page
+    max_context: int              # per-request context ceiling (tokens)
+    decode_batch: int             # continuous-batching decode lanes
+    prefill_chunk: int            # chunked-prefill tokens per jit call
+    decode_tp: int = 1
+    decode_pp: int = 1
+    prefill_tp: int = 1
+    prefill_pp: int = 1
+    kv_pool_pages: int = 0        # shared page-pool capacity (pages/layer)
+    ttft_slo_ms: float = 0.0      # 0 = no TTFT target
+    est_tok_ms: float = 0.0       # predicted per-token decode latency
+    est_ttft_ms: float = 0.0      # predicted time-to-first-token
+    est_tok_per_s: float = 0.0    # predicted aggregate decode throughput
+
+    def to_json(self) -> Dict:
+        return dataclasses.asdict(self)
+
+    @staticmethod
+    def from_json(d: Dict) -> "ServingSection":
+        if not isinstance(d, dict):
+            raise PlanFormatError(
+                "serving",
+                f"must be an object or null, got {type(d).__name__}")
+
+        def req(key):
+            try:
+                return d[key]
+            except KeyError:
+                raise PlanFormatError(
+                    f"serving.{key}",
+                    "required serving field is missing") from None
+
+        known = {f.name for f in dataclasses.fields(ServingSection)}
+        extra = {k: v for k, v in d.items() if k in known
+                 and k not in ("slo_ms", "page_size", "max_context",
+                               "decode_batch", "prefill_chunk")}
+        return ServingSection(
+            slo_ms=req("slo_ms"),
+            page_size=req("page_size"),
+            max_context=req("max_context"),
+            decode_batch=req("decode_batch"),
+            prefill_chunk=req("prefill_chunk"),
+            **extra,
+        )
 
 
 class PlanFormatError(ValueError):
@@ -58,6 +120,8 @@ class ParallelPlan:
     alpha_t: float = 0.0
     alpha_m: float = 0.0
     searched_by: str = "galvatron-bmw"
+    # inference plan (v3+); None for pure training plans
+    serving: Optional[ServingSection] = None
     # search-engine telemetry (stage-search / cache-hit counts, wall time);
     # excluded from equality so cached and uncached searches that find the
     # same plan compare equal
@@ -119,6 +183,8 @@ class ParallelPlan:
             "alpha_t": self.alpha_t,
             "alpha_m": self.alpha_m,
             "searched_by": self.searched_by,
+            "serving": (self.serving.to_json()
+                        if self.serving is not None else None),
             "search_stats": self.search_stats,
         }
 
@@ -188,6 +254,9 @@ class ParallelPlan:
             alpha_t=d.get("alpha_t", 0.0),
             alpha_m=d.get("alpha_m", 0.0),
             searched_by=d.get("searched_by", "galvatron-bmw"),
+            # pre-v3 plan JSON has no serving section
+            serving=(ServingSection.from_json(d["serving"])
+                     if d.get("serving") is not None else None),
             search_stats=d.get("search_stats"),
         )
 

@@ -76,8 +76,9 @@ def certify_plans(plans, *, strict: bool = False, log=print) -> bool:
     return ok
 
 
-def parse_budget_sweep(text: str) -> List[float]:
-    """GB values: ``4,6,8`` or arithmetic ellipsis ``a,b,...,z``."""
+def parse_sweep_values(text: str) -> List[float]:
+    """Comma list ``4,6,8`` or arithmetic ellipsis ``a,b,...,z`` (step
+    ``b - a``), unit-free."""
     parts = [p.strip() for p in text.split(",") if p.strip()]
     if "..." in parts:
         i = parts.index("...")
@@ -92,8 +93,13 @@ def parse_budget_sweep(text: str) -> List[float]:
         vals = list(head)
         while vals[-1] + step <= stop + 1e-9:
             vals.append(vals[-1] + step)
-        return [v * GB for v in vals]
-    return [float(p) * GB for p in parts]
+        return vals
+    return [float(p) for p in parts]
+
+
+def parse_budget_sweep(text: str) -> List[float]:
+    """GB values: ``4,6,8`` or arithmetic ellipsis ``a,b,...,z``."""
+    return [v * GB for v in parse_sweep_values(text)]
 
 
 def _specs_for(args):
@@ -178,6 +184,23 @@ def main(argv=None) -> int:
                     help="single memory budget in GB (one optimize() plan)")
     ap.add_argument("--budget-sweep", default="",
                     help='GB list "4,6,8" or ellipsis "8,16,...,80"')
+    srv = ap.add_argument_group("serving (SLO-axis search)")
+    srv.add_argument("--slo-sweep", default="",
+                     help="per-token latency SLOs in ms "
+                          '("20,30,50" or ellipsis "10,20,...,80"): decode '
+                          "is bandwidth-bound, so each SLO maps to the byte "
+                          "budget slo * hbm_bw * efficiency and rides the "
+                          "same frontier engine as --budget-sweep; emitted "
+                          "plans carry a v3 serving section "
+                          "(docs/serving.md)")
+    srv.add_argument("--max-context", type=int, default=2048,
+                     help="serving plans: per-request context ceiling")
+    srv.add_argument("--mean-context", type=float, default=0.0,
+                     help="serving plans: expected mean context for KV "
+                          "traffic/pool sizing (default max-context / 2)")
+    srv.add_argument("--ttft-slo", type=float, default=0.0,
+                     help="serving plans: optional TTFT target in ms "
+                          "(recorded in the serving section)")
     ap.add_argument("--quant", type=float, default=0.0,
                     help="quantization-grid anchor in GB (default: the "
                          "largest swept budget).  The DP resolves memory in "
@@ -244,7 +267,42 @@ def main(argv=None) -> int:
           f"x{cluster.n_devices}")
 
     workers = args.jobs or args.workers or None
-    if args.budget_sweep:
+    if args.slo_sweep:
+        import json as _json
+
+        from repro.serving import ServingPlanSearch
+        slos = parse_sweep_values(args.slo_sweep)
+        search = ServingPlanSearch(specs, cluster, config=opt.cfg)
+        points, frontier = search.sweep_slos(
+            slos, max_context=args.max_context,
+            mean_context=args.mean_context or None,
+            ttft_slo_ms=args.ttft_slo,
+            backend=args.backend or None, verbose=args.verbose)
+        for pt in points:
+            if pt.plan is None or pt.plan.serving is None:
+                print(f"{pt.slo_ms:8.1f} ms  infeasible "
+                      f"({pt.budget_bytes / GB:.1f} GB streamable/step)")
+                continue
+            sv = pt.plan.serving
+            print(f"{pt.slo_ms:8.1f} ms  tp{sv.decode_tp} pp{sv.decode_pp} "
+                  f"b={sv.decode_batch} page={sv.page_size} "
+                  f"pool={sv.kv_pool_pages}p  "
+                  f"est {sv.est_tok_ms:.2f} ms/tok, "
+                  f"{sv.est_tok_per_s:.0f} tok/s, "
+                  f"ttft {sv.est_ttft_ms:.1f} ms")
+        emitted = [pt.plan for pt in points if pt.plan is not None]
+        if not emitted:
+            print("no SLO point is feasible", file=sys.stderr)
+            return 1
+        if len(emitted) == 1:
+            payload = emitted[0].dumps()     # directly servable plan file
+        else:
+            payload = _json.dumps(
+                {"slo_points": [
+                    {"slo_ms": pt.slo_ms, "budget_bytes": pt.budget_bytes,
+                     "plan": (pt.plan.to_json() if pt.plan else None)}
+                    for pt in points]}, indent=2)
+    elif args.budget_sweep:
         budgets = parse_budget_sweep(args.budget_sweep)
         frontier = opt.sweep_budgets(
             budgets, parallel=args.parallel, max_workers=workers,

@@ -1,11 +1,14 @@
 """Pure-JAX model zoo: dense / MoE / SSM / hybrid / encoder-decoder / VLM."""
 from .common import INPUT_SHAPES, InputShape, ModelConfig
 from .transformer import (decode_step, init_decode_state, init_lm, lm_forward,
-                          lm_loss)
+                          lm_loss, init_paged_state, paged_decode_step,
+                          paged_prefill_step, supports_paged_decode)
 from .encdec import (encdec_decode_step, encdec_loss, encode,
                      init_encdec, init_encdec_decode_state)
 
 __all__ = ["INPUT_SHAPES", "InputShape", "ModelConfig", "decode_step",
            "init_decode_state", "init_lm", "lm_forward", "lm_loss",
            "encdec_decode_step", "encdec_loss", "encode", "init_encdec",
-           "init_encdec_decode_state"]
+           "init_encdec_decode_state", "init_paged_state",
+           "paged_decode_step", "paged_prefill_step",
+           "supports_paged_decode"]

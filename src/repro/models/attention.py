@@ -165,34 +165,137 @@ def attention_decode(p, x: jax.Array, cache: Dict[str, jax.Array],
 
     x (B,1,d).  cache["k"/"v"]: (B, C, KV, dh) with C = max context (full) or
     the sliding window span.  ``cache_index`` — number of tokens already in
-    context (absolute position of the new token).
+    context (absolute position of the new token); a scalar shared by every
+    lane, or per-lane ``(B,)`` when lanes sit at different positions (the
+    continuous-batching serve path after slot recycling).
     """
     B, S, _ = x.shape
     assert S == 1
     C = cache["k"].shape[1]
-    pos = jnp.full((B, 1), cache_index, dtype=jnp.int32)
-    q, k, v = _project_qkv(p, x, cfg, pos)
-    slot = (cache_index % C).astype(jnp.int32)
-    new_k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-    new_v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    idx = jnp.broadcast_to(jnp.asarray(cache_index, jnp.int32), (B,))
+    q, k, v = _project_qkv(p, x, cfg, idx.reshape(B, 1))
+    slot = (idx % C).astype(jnp.int32)                      # (B,)
+    lane = jnp.arange(B)
+    new_k = cache["k"].at[lane, slot].set(k[:, 0].astype(cache["k"].dtype))
+    new_v = cache["v"].at[lane, slot].set(v[:, 0].astype(cache["v"].dtype))
 
     # position stored in each ring slot: the latest p with p % C == slot
     # and p <= cache_index
     kpos = jnp.arange(C)
-    abs_pos = cache_index - ((cache_index - kpos) % C)
-    valid = (abs_pos >= 0) & (abs_pos <= cache_index)   # >=0: slot written
+    idx_c = idx[:, None]                                    # (B,1)
+    abs_pos = idx_c - ((idx_c - kpos[None, :]) % C)         # (B,C)
+    valid = (abs_pos >= 0) & (abs_pos <= idx_c)   # >=0: slot written
     if window is not None:
-        valid &= abs_pos > cache_index - window
+        valid &= abs_pos > idx_c - window
     scale = 1.0 / jnp.sqrt(cfg.dh).astype(jnp.float32)
     KV = cfg.n_kv_heads
     G = cfg.n_heads // KV
     qg = q.reshape(B, 1, KV, G, cfg.dh)
     scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
                         new_k.astype(jnp.float32)) * scale
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bkgst,btkd->bskgd", probs, new_v.astype(jnp.float32))
     out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+def attention_decode_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
+                           page_rows: jax.Array, lengths: jax.Array,
+                           cfg: ModelConfig, *,
+                           window: Optional[int] = None
+                           ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode against a paged KV cache.
+
+    x (B,1,d).  pool["k"/"v"]: shared page pools (N, psz, KV, dh) — every
+    lane's K/V lives in pool pages, so memory scales with tokens actually
+    cached rather than lanes * max-context.  ``page_rows`` (B, P) int32 maps
+    each lane's logical page p to a pool row (-1 = unassigned);
+    ``lengths`` (B,) is each lane's current context length (the write
+    position for the new token).  Inactive lanes signal with a negative
+    length: their write is routed out of bounds and dropped.
+
+    The gathered per-lane view is a *linear* cache (position t at row
+    t // psz, offset t % psz), so with identical inputs the output matches
+    :func:`attention_decode` on a ring cache of span P * psz exactly —
+    the paged/dense differential tests rely on this.
+    """
+    B, S, _ = x.shape
+    assert S == 1
+    N, psz, KV, dh = pool["k"].shape
+    P = page_rows.shape[1]
+    L = lengths.astype(jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, jnp.maximum(L, 0).reshape(B, 1))
+    # scatter the new token at (page_rows[lane, L // psz], L % psz);
+    # unassigned pages / inactive lanes route to row N (out of bounds)
+    # and the write is dropped
+    pi = jnp.clip(L // psz, 0, P - 1)
+    page = jnp.take_along_axis(page_rows, pi[:, None], axis=1)[:, 0]  # (B,)
+    page = jnp.where((page < 0) | (L < 0) | (L // psz >= P), N, page)
+    off = jnp.clip(L % psz, 0, psz - 1)
+    new_k = pool["k"].at[page, off].set(
+        k[:, 0].astype(pool["k"].dtype), mode="drop")
+    new_v = pool["v"].at[page, off].set(
+        v[:, 0].astype(pool["v"].dtype), mode="drop")
+    # gather each lane's pages into a linear (B, P*psz, KV, dh) view;
+    # unassigned rows gather page 0 (garbage) and are masked below
+    rows = jnp.where(page_rows < 0, 0, page_rows)
+    gk = new_k[rows].reshape(B, P * psz, KV, dh)
+    gv = new_v[rows].reshape(B, P * psz, KV, dh)
+    kpos = jnp.arange(P * psz)
+    valid = kpos[None, :] <= L[:, None]                     # (B, C)
+    if window is not None:
+        valid &= kpos[None, :] > L[:, None] - window
+    scale = 1.0 / jnp.sqrt(cfg.dh).astype(jnp.float32)
+    G = cfg.n_heads // KV
+    qg = q.reshape(B, 1, KV, G, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        gk.astype(jnp.float32)) * scale
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, gv.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.q_dim).astype(x.dtype) @ p["wo"]
+    return out, {"k": new_k, "v": new_v}
+
+
+def attention_prefill_paged(p, x: jax.Array, pool: Dict[str, jax.Array],
+                            page_rows: jax.Array, base: jax.Array,
+                            prompt_len: jax.Array, cfg: ModelConfig, *,
+                            window: Optional[int] = None
+                            ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunked-prefill attention that captures K/V into the page pools.
+
+    x (B,S,d): one prompt chunk covering absolute positions
+    [base, base + S) for every lane (``base`` may be a traced scalar, so
+    one compilation serves the whole chunk loop).  ``prompt_len`` (B,)
+    clips per-lane writes and masks shorter prompts; padding lanes use
+    ``prompt_len = 0``.  Writes the chunk's K/V into the pools *first*,
+    then attends over the gathered pool view, so earlier chunks of the
+    same prompt are visible.
+    """
+    B, S, _ = x.shape
+    N, psz, KV, dh = pool["k"].shape
+    P = page_rows.shape[1]
+    base = jnp.asarray(base, jnp.int32)
+    ap = base + jnp.arange(S, dtype=jnp.int32)              # (S,) abs pos
+    q, k, v = _project_qkv(p, x, cfg, jnp.broadcast_to(ap, (B, S)))
+    pi = jnp.clip(ap // psz, 0, P - 1)                      # (S,)
+    page = page_rows[:, pi]                                 # (B,S)
+    in_prompt = ap[None, :] < prompt_len[:, None]           # (B,S)
+    page = jnp.where((page < 0) | ~in_prompt
+                     | (ap[None, :] // psz >= P), N, page)
+    off = jnp.broadcast_to(ap % psz, (B, S))
+    new_k = pool["k"].at[page, off].set(
+        k.astype(pool["k"].dtype), mode="drop")
+    new_v = pool["v"].at[page, off].set(
+        v.astype(pool["v"].dtype), mode="drop")
+    rows = jnp.where(page_rows < 0, 0, page_rows)
+    gk = new_k[rows].reshape(B, P * psz, KV, dh)
+    gv = new_v[rows].reshape(B, P * psz, KV, dh)
+    kv_len = jnp.minimum(prompt_len, base + S)
+    out = sdpa_ref(q, gk, gv, causal=True, window=window,
+                   q_offset=base, kv_len=kv_len)
+    out = out.reshape(B, S, cfg.q_dim) @ p["wo"]
     return out, {"k": new_k, "v": new_v}
 
 
@@ -219,4 +322,12 @@ def init_kv_cache(cfg: ModelConfig, batch: int, context: int,
     span = context if cfg.sliding_window is None else min(context, cfg.sliding_window)
     dt = dtype or cfg.dtype
     shape = (batch, span, cfg.n_kv_heads, cfg.dh)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def init_page_pool(cfg: ModelConfig, n_pages: int, page_size: int,
+                   *, dtype=None) -> Dict[str, jax.Array]:
+    """Shared K/V page pool for one layer: (n_pages, page_size, KV, dh)."""
+    dt = dtype or cfg.dtype
+    shape = (n_pages, page_size, cfg.n_kv_heads, cfg.dh)
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

@@ -24,8 +24,9 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from .attention import (attention, attention_decode, init_attention,
-                        init_kv_cache)
+from .attention import (attention, attention_decode, attention_decode_paged,
+                        attention_prefill_paged, init_attention,
+                        init_kv_cache, init_page_pool)
 from .common import ModelConfig
 from .flags import constrain_batch, constrain_batch_only, scan_unroll
 from .embedding import embed, init_embedding, init_projector, project
@@ -352,3 +353,102 @@ def decode_step(params, state, token: jax.Array, cfg: ModelConfig, *,
 
     logits = _logits(params, x, cfg)[:, 0]
     return logits, new_state
+
+
+# --------------------------------------------------------------------------
+# paged decode (serving engine)
+# --------------------------------------------------------------------------
+
+def supports_paged_decode(cfg: ModelConfig) -> bool:
+    """Paged serving covers pure-attention stacks (dense / MoE decoders);
+    SSM/hybrid state is not paged and enc-dec needs cross-attention."""
+    return (not cfg.is_encoder_decoder
+            and all(kind != "ssm" for kind, _ in build_stacks(cfg))
+            and cfg.arch_type not in ("ssm", "hybrid"))
+
+
+def init_paged_state(cfg: ModelConfig, n_pages: int, page_size: int,
+                     *, dtype=None) -> Dict[str, Any]:
+    """Per-layer K/V page pools, stacked to match the scan layout.
+
+    Unlike :func:`init_decode_state` the pools are shared across lanes:
+    total KV memory is n_pages * page_size tokens per layer regardless of
+    how many lanes are configured."""
+    if not supports_paged_decode(cfg):
+        raise NotImplementedError(
+            f"paged decode does not support arch_type={cfg.arch_type!r}")
+    stacks = []
+    for _, n in build_stacks(cfg):
+        one = init_page_pool(cfg, n_pages, page_size, dtype=dtype)
+        stacks.append(jax.tree.map(
+            lambda v: jnp.broadcast_to(v, (n,) + v.shape), one))
+    return {"stacks": stacks}
+
+
+def _paged_scan(params, pools, x, cfg, attn_fn):
+    """Scan ``attn_fn`` + FFN over each stack; returns (x, new pools)."""
+    new_stacks = []
+    for (kind, _), stack_params, pstack in zip(
+            build_stacks(cfg), params["stacks"], pools["stacks"]):
+
+        def body(carry, inp):
+            h = carry
+            lp, lpool = inp
+            hn = rms_norm(h, lp["ln1"], cfg.norm_eps)
+            a, new_pool = attn_fn(lp["attn"], hn, lpool)
+            h = h + a
+            hn = rms_norm(h, lp["ln2"], cfg.norm_eps)
+            if "mlp" in lp:
+                h = h + swiglu_mlp(lp["mlp"], hn)
+            else:
+                y, _ = moe_ffn(lp["moe"], hn, cfg)
+                h = h + y
+            return h, new_pool
+
+        n_l = jax.tree_util.tree_leaves(stack_params)[0].shape[0]
+        x, new_pool = jax.lax.scan(body, x, (stack_params, pstack),
+                                   unroll=scan_unroll(n_l))
+        new_stacks.append(new_pool)
+    return x, {"stacks": new_stacks}
+
+
+def paged_decode_step(params, pools, token: jax.Array,
+                      page_rows: jax.Array, lengths: jax.Array,
+                      cfg: ModelConfig, *,
+                      window: Optional[int] = None) -> Tuple[jax.Array, Dict]:
+    """One decode step on the paged KV cache.
+
+    token (B,) -> logits (B, V) + new pools.  ``page_rows`` (B, P) /
+    ``lengths`` (B,) come from the serving engine's page table (same table
+    for every layer; each layer owns its own pool rows)."""
+    x = embed(params["embed"], token)[:, None, :]
+    win = window if window is not None else cfg.sliding_window
+    x, new_pools = _paged_scan(
+        params, pools, x, cfg,
+        lambda p, h, lpool: attention_decode_paged(
+            p, h, lpool, page_rows, lengths, cfg, window=win))
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, new_pools
+
+
+def paged_prefill_step(params, pools, tokens: jax.Array,
+                       page_rows: jax.Array, base: jax.Array,
+                       prompt_len: jax.Array, cfg: ModelConfig, *,
+                       window: Optional[int] = None
+                       ) -> Tuple[jax.Array, Dict]:
+    """One chunked-prefill step: process prompt chunk ``tokens`` (B, S)
+    covering absolute positions [base, base + S), writing K/V into the
+    page pools.  Returns logits (B, V) taken at each lane's *last prompt
+    position* (meaningful only for lanes whose prompt ends inside this
+    chunk) plus the updated pools."""
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens)
+    win = window if window is not None else cfg.sliding_window
+    x, new_pools = _paged_scan(
+        params, pools, x, cfg,
+        lambda p, h, lpool: attention_prefill_paged(
+            p, h, lpool, page_rows, base, prompt_len, cfg, window=win))
+    last = jnp.clip(prompt_len - 1 - base, 0, S - 1)        # (B,)
+    xl = x[jnp.arange(B), last][:, None, :]                 # (B,1,d)
+    logits = _logits(params, xl, cfg)[:, 0]
+    return logits, new_pools

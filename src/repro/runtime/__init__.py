@@ -1,18 +1,22 @@
 from .executor import (BuiltStep, abstract_decode_state, abstract_opt_state,
-                       abstract_params, init_train_state, make_prefill_step,
+                       abstract_paged_state, abstract_params,
+                       init_train_state, make_paged_decode_step,
+                       make_paged_prefill_step, make_prefill_step,
                        make_serve_step, make_train_step)
 from .pipeline import (make_pipeline_loss, make_pipeline_loss_from_program,
                        stage_split_params)
 from .schedules import (PHASE_B, PHASE_F, PHASE_W, SCHEDULE_NAMES,
                         ScheduleProgram, compile_schedule, zb_w_pending_max)
 from .sharding import (ShardPolicy, batch_shardings, decode_state_shardings,
-                       opt_shardings, param_shardings)
+                       opt_shardings, paged_state_shardings, param_shardings)
 
 __all__ = ["BuiltStep", "PHASE_B", "PHASE_F", "PHASE_W", "SCHEDULE_NAMES",
            "ScheduleProgram", "ShardPolicy", "zb_w_pending_max",
-           "abstract_decode_state", "abstract_opt_state", "abstract_params",
+           "abstract_decode_state", "abstract_opt_state",
+           "abstract_paged_state", "abstract_params",
            "batch_shardings", "compile_schedule", "decode_state_shardings",
-           "init_train_state", "make_pipeline_loss",
+           "init_train_state", "make_paged_decode_step",
+           "make_paged_prefill_step", "make_pipeline_loss",
            "make_pipeline_loss_from_program", "make_prefill_step",
            "make_serve_step", "make_train_step", "opt_shardings",
-           "param_shardings", "stage_split_params"]
+           "paged_state_shardings", "param_shardings", "stage_split_params"]

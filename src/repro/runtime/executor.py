@@ -18,13 +18,14 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import (decode_step, encdec_loss, init_decode_state,
                           init_encdec, init_encdec_decode_state, init_lm,
-                          lm_loss)
+                          init_paged_state, lm_loss, paged_decode_step,
+                          paged_prefill_step)
 from repro.models.common import ModelConfig
 from repro.models.flags import batch_sharding
 from repro.optim import AdamWConfig, adamw_init, adamw_update
 from repro.runtime.sharding import (ShardPolicy, batch_shardings,
                                     decode_state_shardings, opt_shardings,
-                                    param_shardings)
+                                    paged_state_shardings, param_shardings)
 
 
 # --------------------------------------------------------------------------
@@ -161,6 +162,70 @@ def make_serve_step(cfg: ModelConfig, mesh: Mesh, policy: ShardPolicy,
                  donate_argnums=(1,))
     return BuiltStep(fn=fn, abstract_args=(aparams, astate, atoken),
                      in_shardings=(ps, ss, bt))
+
+
+def abstract_paged_state(cfg: ModelConfig, n_pages: int, page_size: int):
+    return jax.eval_shape(lambda: init_paged_state(cfg, n_pages, page_size))
+
+
+def make_paged_decode_step(cfg: ModelConfig, mesh: Mesh, policy: ShardPolicy,
+                           n_slots: int, n_pages: int, page_size: int,
+                           pages_per_slot: int) -> BuiltStep:
+    """One-token decode over the shared KV page pools (serving engine).
+
+    Signature of the built fn:
+    ``(params, pools, token (B,), page_rows (B,P), lengths (B,))``
+    -> ``(logits (B,V), new_pools)`` with the pools donated."""
+    aparams = abstract_params(cfg)
+    apools = abstract_paged_state(cfg, n_pages, page_size)
+    atoken = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+    arows = jax.ShapeDtypeStruct((n_slots, pages_per_slot), jnp.int32)
+    alens = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+
+    def step(params, pools, token, page_rows, lengths):
+        return paged_decode_step(params, pools, token, page_rows, lengths,
+                                 cfg)
+
+    ps = param_shardings(aparams, mesh, policy)
+    pls = paged_state_shardings(apools, mesh, policy)
+    rep = NamedSharding(mesh, P())
+    fn = jax.jit(step, in_shardings=(ps, pls, rep, rep, rep),
+                 donate_argnums=(1,))
+    return BuiltStep(fn=fn,
+                     abstract_args=(aparams, apools, atoken, arows, alens),
+                     in_shardings=(ps, pls, rep, rep, rep))
+
+
+def make_paged_prefill_step(cfg: ModelConfig, mesh: Mesh, policy: ShardPolicy,
+                            prefill_batch: int, prefill_chunk: int,
+                            n_pages: int, page_size: int,
+                            pages_per_slot: int) -> BuiltStep:
+    """Chunked prefill filling the KV page pools (serving engine).
+
+    Signature of the built fn:
+    ``(params, pools, tokens (PB,S), page_rows (PB,P), base, prompt_len (PB,))``
+    -> ``(last-prompt-position logits (PB,V), new_pools)``; ``base`` is a
+    traced scalar so the whole chunk loop reuses one compilation."""
+    aparams = abstract_params(cfg)
+    apools = abstract_paged_state(cfg, n_pages, page_size)
+    atokens = jax.ShapeDtypeStruct((prefill_batch, prefill_chunk), jnp.int32)
+    arows = jax.ShapeDtypeStruct((prefill_batch, pages_per_slot), jnp.int32)
+    abase = jax.ShapeDtypeStruct((), jnp.int32)
+    alens = jax.ShapeDtypeStruct((prefill_batch,), jnp.int32)
+
+    def step(params, pools, tokens, page_rows, base, prompt_len):
+        return paged_prefill_step(params, pools, tokens, page_rows, base,
+                                  prompt_len, cfg)
+
+    ps = param_shardings(aparams, mesh, policy)
+    pls = paged_state_shardings(apools, mesh, policy)
+    rep = NamedSharding(mesh, P())
+    fn = jax.jit(step, in_shardings=(ps, pls, rep, rep, rep, rep),
+                 donate_argnums=(1,))
+    return BuiltStep(
+        fn=fn,
+        abstract_args=(aparams, apools, atokens, arows, abase, alens),
+        in_shardings=(ps, pls, rep, rep, rep, rep))
 
 
 # --------------------------------------------------------------------------

@@ -162,6 +162,29 @@ def batch_shardings(abstract_batch, mesh: Mesh):
     return jax.tree_util.tree_map_with_path(leaf, abstract_batch)
 
 
+def paged_state_shardings(abstract_pools, mesh: Mesh, pol: ShardPolicy):
+    """KV page pools (L, N, psz, KV, dh): TP shards the KV-head dim over
+    ``model`` (head-parallel decode).  The page dimension stays replicated
+    across the batch axes — pages are shared by every lane, so any data
+    shard must be able to gather any pool row."""
+    model = "model" if ("model" in mesh.axis_names and pol.tp) else None
+
+    def leaf(path, x):
+        names = [getattr(k, "key", None) for k in path
+                 if getattr(k, "key", None)]
+        name = names[-1] if names else ""
+        nd = x.ndim
+        if name in ("k", "v") and nd >= 4:
+            entries = [None] * nd
+            kv_dim = nd - 2
+            if model and x.shape[kv_dim] % _axis_size(mesh, model) == 0:
+                entries[kv_dim] = model
+            return NamedSharding(mesh, P(*entries))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map_with_path(leaf, abstract_pools)
+
+
 def decode_state_shardings(abstract_state, mesh: Mesh, pol: ShardPolicy):
     """KV caches: batch over data axes; context (or SSM heads) over model."""
     bt = batch_axes(mesh)

@@ -91,6 +91,23 @@ def test_docs_analysis_cli_help_embed_is_current(monkeypatch, capsys):
         "COLUMNS=80 python -m repro.analysis --help")
 
 
+def test_docs_serving_cli_help_embed_is_current(monkeypatch, capsys):
+    """docs/serving.md embeds serve.py's --help; regenerate from the live
+    parser at the same wrap and require a byte match."""
+    from repro.launch import serve as serve_cli
+
+    monkeypatch.setenv("COLUMNS", "80")
+    with pytest.raises(SystemExit):
+        serve_cli.main(["--help"])
+    expected = capsys.readouterr().out
+    doc = (REPO / "docs" / "serving.md").read_text()
+    m = re.search(r"```text\n(usage: serve\.py.*?)```\n", doc, re.S)
+    assert m, "docs/serving.md lost its embedded --help block"
+    assert m.group(1) == expected, (
+        "docs/serving.md --help embed is stale; regenerate with "
+        "COLUMNS=80 python -m repro.launch.serve --help")
+
+
 @pytest.mark.parametrize("path", LINKED_MD, ids=lambda p: p.name)
 def test_docs_relative_links_resolve(path):
     assert path.exists(), path

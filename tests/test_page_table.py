@@ -1,0 +1,163 @@
+"""Paged KV-cache page-table invariants (repro.serving.page_table).
+
+The PageManager is pure function-of-state and jit-compatible: every op
+returns a new PageState.  These tests check the allocator's accounting —
+no double allocation, exact free/used counts, rank-matched grants under
+contention, graceful refusal when the pool is exhausted — all of which the
+serving engine relies on for correctness (a double-granted page would
+silently cross-contaminate two requests' KV).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving import PageManager
+
+
+def mk(n_pages=16, n_slots=4, page_size=8, pages_per_slot=4):
+    return PageManager(n_pages=n_pages, n_slots=n_slots,
+                       page_size=page_size, pages_per_slot=pages_per_slot)
+
+
+def owners_consistent(pm, st):
+    """page_owner and page_rows must agree exactly."""
+    owner = np.asarray(st.page_owner)
+    rows = np.asarray(st.page_rows)
+    for slot in range(pm.n_slots):
+        for p in rows[slot]:
+            if p >= 0:
+                assert owner[p] == slot, (slot, p, owner[p])
+    for page, o in enumerate(owner):
+        if o >= 0:
+            assert page in rows[o], (page, o)
+
+
+def test_init_all_free():
+    pm = mk()
+    st = pm.init()
+    assert int(pm.free_pages(st)) == pm.n_pages
+    assert int(pm.used_pages(st)) == 0
+    assert float(pm.occupancy(st)) == 0.0
+    assert not bool(jnp.any(st.active))
+
+
+def test_admit_reserves_ceil_div_pages():
+    pm = mk(page_size=8)
+    st = pm.init()
+    for plen, want in [(1, 1), (8, 1), (9, 2), (16, 2), (17, 3)]:
+        st2, ok = pm.admit(st, 0, plen)
+        assert bool(ok)
+        assert int(pm.used_pages(st2)) == want
+        assert int(st2.lengths[0]) == 0 and bool(st2.active[0])
+        owners_consistent(pm, st2)
+
+
+def test_admit_rollback_when_pool_too_small():
+    pm = mk(n_pages=2, page_size=8, pages_per_slot=4)
+    st = pm.init()
+    st, ok = pm.admit(st, 0, 17)          # needs 3 pages, pool has 2
+    assert not bool(ok)
+    # full rollback: nothing allocated, slot not activated
+    assert int(pm.used_pages(st)) == 0
+    assert not bool(st.active[0])
+
+
+def test_free_slot_returns_pages():
+    pm = mk()
+    st = pm.init()
+    st, ok = pm.admit(st, 1, 20)
+    assert bool(ok)
+    used = int(pm.used_pages(st))
+    assert used == 3
+    st = pm.free_slot(st, 1)
+    assert int(pm.used_pages(st)) == 0
+    assert not bool(st.active[1])
+    assert not bool(jnp.any(st.page_rows[1] >= 0))
+    owners_consistent(pm, st)
+
+
+def test_no_double_allocation_across_slots():
+    pm = mk(n_pages=8, n_slots=4, page_size=8, pages_per_slot=2)
+    st = pm.init()
+    for slot in range(4):
+        st, ok = pm.admit(st, slot, 16)   # 2 pages each -> exactly full
+        assert bool(ok)
+    owner = np.asarray(st.page_owner)
+    assert (owner >= 0).all()             # pool exactly exhausted
+    rows = np.asarray(st.page_rows)
+    flat = rows[rows >= 0]
+    assert len(set(flat.tolist())) == len(flat)   # all distinct pages
+    owners_consistent(pm, st)
+
+
+def test_ensure_append_capacity_rank_matching():
+    """Three lanes hit a page boundary at once with only 2 free pages:
+    exactly two rank-matched grants, the third lane is refused (not
+    corrupted)."""
+    pm = mk(n_pages=5, n_slots=3, page_size=4, pages_per_slot=4)
+    st = pm.init()
+    for slot in range(3):
+        st, ok = pm.admit(st, slot, 4)    # 1 page each -> 2 pages free
+        assert bool(ok)
+    st = pm.advance(st, jnp.array([True, True, True]))  # len 1
+    # jump to the boundary: next token needs a second page per lane
+    st = st._replace(lengths=jnp.array([4, 4, 4], jnp.int32))
+    want = jnp.array([True, True, True])
+    st2, ok = pm.ensure_append_capacity(st, want)
+    assert int(jnp.sum(ok)) == 2
+    assert int(pm.free_pages(st2)) == 0
+    owners_consistent(pm, st2)
+    # the refused lane keeps its old single page, untouched
+    refused = int(jnp.argmin(ok))
+    assert int(jnp.sum(st2.page_rows[refused] >= 0)) == 1
+
+
+def test_ensure_append_capacity_noop_mid_page():
+    pm = mk(page_size=8)
+    st = pm.init()
+    st, _ = pm.admit(st, 0, 4)
+    st = st._replace(lengths=jnp.array([2, 0, 0, 0], jnp.int32))
+    before = int(pm.used_pages(st))
+    st2, ok = pm.ensure_append_capacity(st, jnp.array([True, False, False,
+                                                       False]))
+    assert bool(ok[0])
+    assert int(pm.used_pages(st2)) == before      # mid-page: nothing to do
+
+
+def test_ensure_append_capacity_respects_max_context():
+    pm = mk(n_pages=16, n_slots=2, page_size=4, pages_per_slot=2)  # max 8 tok
+    st = pm.init()
+    st, _ = pm.admit(st, 0, 4)
+    st = st._replace(lengths=jnp.array([8, 0], jnp.int32))  # at the ceiling
+    st2, ok = pm.ensure_append_capacity(st, jnp.array([True, False]))
+    assert not bool(ok[0])                # cannot grow past pages_per_slot
+
+
+def test_ops_jit_compatible():
+    pm = mk()
+    st = pm.init()
+
+    @jax.jit
+    def go(st):
+        st, ok = pm.admit(st, 0, 12)
+        st, ok2 = pm.ensure_append_capacity(
+            st, jnp.array([True, False, False, False]))
+        st = pm.advance(st, jnp.array([True, False, False, False]))
+        return st, ok, ok2
+
+    st, ok, ok2 = go(st)
+    assert bool(ok) and bool(ok2[0])
+    assert int(st.lengths[0]) == 1
+    owners_consistent(pm, st)
+
+
+def test_recycle_slot_reuses_pages():
+    pm = mk(n_pages=4, n_slots=2, page_size=8, pages_per_slot=2)
+    st = pm.init()
+    st, ok = pm.admit(st, 0, 16)
+    assert bool(ok) and int(pm.free_pages(st)) == 2
+    st = pm.free_slot(st, 0)
+    st, ok = pm.admit(st, 0, 16)          # recycled slot gets pages again
+    assert bool(ok) and int(pm.free_pages(st)) == 2
+    owners_consistent(pm, st)

@@ -40,12 +40,12 @@ def test_backward_compat_pr1_json_defaults_vpp_to_1():
     assert ParallelPlan.from_json(json.loads(json.dumps(d))).schedule == "1f1b"
 
 
-def test_v2_format_version_stamp_and_zb_h1_roundtrip():
+def test_format_version_stamp_and_zb_h1_roundtrip():
     from repro.core import PLAN_FORMAT_VERSION
 
     plan = _plan(schedule="zb-h1")
     d = plan.to_json()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 2
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 3
     plan2 = ParallelPlan.loads(plan.dumps())
     assert plan2 == plan and plan2.schedule == "zb-h1"
     # v0/v1 readers' keys are all still present (additive evolution only)
@@ -53,7 +53,15 @@ def test_v2_format_version_stamp_and_zb_h1_roundtrip():
                 "global_batch", "n_micro", "schedule", "vpp_degree"):
         assert key in d, key
     # the canonical byte-oracle includes the stamp on both sides
-    assert json.loads(plan.canonical_dumps())["format_version"] == 2
+    assert json.loads(plan.canonical_dumps())["format_version"] == 3
+
+
+def test_v2_json_without_serving_still_loads():
+    d = _plan().to_json()
+    del d["serving"]                  # v2-era plan JSON has no serving key
+    d["format_version"] = 2
+    plan = ParallelPlan.from_json(d)
+    assert plan.serving is None
 
 
 def test_search_stats_excluded_from_equality():
