@@ -1,5 +1,5 @@
 """Plan verifier: static checks on ``ParallelPlan`` JSON, every format
-version (rule ids ``PLN001``–``PLN010``, catalog in ``docs/analysis.md``).
+version (rule ids ``PLN001``–``PLN011``, catalog in ``docs/analysis.md``).
 
 The search emits a plan; the runtime executes it — possibly in a
 different process, weeks later, from a file somebody hand-edited.  This
@@ -47,10 +47,16 @@ _SINGLE_CHUNK = ("gpipe", "1f1b", "zb-h1")
 
 def detect_format_version(d: Dict) -> int:
     """Infer the format version of a raw plan dict (see core/plan.py):
-    explicit ``format_version`` stamp (v2+), else a non-null ``serving``
-    section implies v3, else ``vpp_degree`` implies v1, else v0."""
+    explicit ``format_version`` stamp (v2+), else a non-default
+    ``sp_degree``/``seq_len`` implies v4, else a non-null ``serving``
+    section implies v3, else ``vpp_degree`` implies v1, else v0.  Like
+    ``serving: null``, the v4 keys at their defaults (1 / 0) carry no
+    version signal — an older file is indistinguishable from one."""
     if "format_version" in d:
         return int(d["format_version"])
+    if isinstance(d, dict) and (d.get("sp_degree", 1) != 1
+                                or d.get("seq_len", 0)):
+        return 4
     if isinstance(d, dict) and d.get("serving") is not None:
         return 3
     return 1 if ("vpp_degree" in d or "schedule" in d) else 0
@@ -128,7 +134,8 @@ def _check_version(d: Dict, loc: str, strict: bool,
             "PLN001", f"{loc}.format_version",
             f"deprecated v{ver} plan (current is v{PLAN_FORMAT_VERSION}): "
             "missing keys are filled with the defaults that version "
-            "implied (schedule='1f1b', vpp_degree=1, serving=None)"
+            "implied (schedule='1f1b', vpp_degree=1, serving=None, "
+            "sp_degree=1)"
             + (" — rejected under --strict" if strict else ""),
             "re-emit with the current search CLI to pin the schedule "
             "explicitly"))
@@ -342,6 +349,48 @@ def verify_plan(plan: ParallelPlan, *, location: str = "plan"
                 f"exceeds the plan's own SLO ({sv.slo_ms:.2f} ms): the "
                 "search emitted a best-effort point, not an SLO-meeting "
                 "one"))
+
+    # --- PLN011: sequence parallelism (sp_degree) -------------------------
+    spd = plan.sp_degree
+    if spd > 1:
+        if n_dev % (P * spd):
+            out.append(error(
+                "PLN011", f"{loc}.sp_degree",
+                f"sp_degree={spd} x pp_degree={P} = {P * spd} does not "
+                f"divide n_devices={n_dev}: the seq mesh axis cannot be "
+                "factored out of the stage groups (launch/mesh.py)",
+                "sp_degree must divide n_devices / pp_degree"))
+        if plan.seq_len > 0 and plan.seq_len % spd:
+            out.append(error(
+                "PLN011", f"{loc}.seq_len",
+                f"seq_len={plan.seq_len} is not divisible by "
+                f"sp_degree={spd}: sequence shards would be ragged and "
+                "the ring hand-off panels unequal "
+                "(kernels/ring_attention.py)",
+                "pick sp_degree dividing the sequence length"))
+        elif plan.seq_len == 0:
+            out.append(warning(
+                "PLN011", f"{loc}.seq_len",
+                f"sp_degree={spd} but the plan does not record seq_len: "
+                "the seq_len % sp_degree divisibility cannot be checked "
+                "statically",
+                "re-emit with the current search CLI to stamp seq_len"))
+    if plan.strategies:
+        layer_sp = sorted({s.sp for s in plan.strategies})
+        if layer_sp[-1] > spd:
+            out.append(error(
+                "PLN011", f"{loc}.sp_degree",
+                f"per-layer strategies reach sp={layer_sp[-1]} but the "
+                f"plan stamps sp_degree={spd}: the launcher would build a "
+                "seq mesh axis too small for those layers",
+                "sp_degree must be max(layer sp degrees)"))
+        elif spd > 1 and len(layer_sp) > 1:
+            out.append(warning(
+                "PLN011", f"{loc}.strategies",
+                f"layers mix sp degrees {layer_sp}; boundaries between "
+                "differently-sharded sequences reshard tokens "
+                "(all-to-all) beside the priced hand-offs",
+                "prefer one sp degree across a stage"))
 
     # --- PLN008: estimator self-consistency -------------------------------
     if plan.est_stage_mem is not None and len(plan.est_stage_mem) != P:

@@ -27,14 +27,33 @@ import numpy as np
 
 from .hardware import ClusterSpec
 from .layerspec import LayerSpec
-from .strategy import DP, SDP, TP, Strategy
+from .strategy import DP, SDP, SP, TP, Strategy
 
 # which profiled collective prices which paradigm's traffic
 _PARADIGM_COLLECTIVE = {
     TP: "all_reduce",        # activation all-reduce (fwd + bwd)
     DP: "all_reduce",        # gradient all-reduce
     SDP: "all_gather",       # param all-gather (reduce-scatter priced apart)
+    SP: "ppermute",          # ring-attention K/V panel hand-off
 }
+
+# finite poison for (layer, strategy) pairs SP cannot execute (sequence not
+# divisible, recurrent kind, no sequence axis).  Kept finite — a true inf
+# would turn the DP objective's ``t_ns + (t_s - t_ns)/m`` into NaN — but
+# large enough that any plan containing one loses to every real plan.
+_SP_INVALID_TIME = 1e30
+
+
+def _sp_applicable(spec: LayerSpec, sp: int) -> bool:
+    """Can this layer run sequence-sharded at degree ``sp``?
+
+    SSM layers carry a sequential state scan that the ring hand-off does
+    not implement, and a layer without a sequence axis (or one ``sp``
+    does not divide) cannot shard tokens evenly."""
+    if sp <= 1:
+        return True
+    return (spec.seq_len > 0 and spec.seq_len % sp == 0
+            and spec.kind != "ssm")
 
 
 # --------------------------------------------------------------------------
@@ -159,6 +178,15 @@ class CostModelConfig:
     # when True expert weights are sharded along the TP level (expert
     # parallelism) and token dispatch uses all-to-all
     moe_expert_parallel_tp: bool = True
+    # physical per-device batch floor: strategies whose DP/SDP span leaves
+    # fewer than this many samples per device are marked infeasible (poison
+    # time, finite memory).  The paper's linear model admits fractional
+    # b_dev — 8 devices "sharing" one sequence — which data parallelism
+    # cannot execute; with the floor at 1.0, sequence parallelism becomes
+    # the only axis that splits a single long sequence (the long-context
+    # regime, docs/architecture.md §SP).  0.0 (default) keeps the
+    # unconstrained paper model, bit-identical to prior searches.
+    min_samples_per_device: float = 0.0
 
 
 class CostModel:
@@ -244,7 +272,7 @@ class CostModel:
                     inflight: float = 1) -> LayerCosts:
         cfg = self.cfg
         dev = self.cluster.device
-        dp, sdp, tp = strat.dp, strat.sdp, strat.tp
+        dp, sdp, tp, sp = strat.dp, strat.sdp, strat.tp, strat.sp
         data_deg = dp * sdp
         b_dev = micro_batch_size / data_deg
 
@@ -255,8 +283,10 @@ class CostModel:
         ms = cfg.bytes_per_param_states * params_dev / sdp
 
         # ---- memory: activations ---------------------------------------
-        bnd_dev = spec.bnd_bytes_per_sample * b_dev
-        int_dev = spec.int_bytes_per_sample * b_dev / tp
+        # SP shards the sequence axis: every activation tensor holds S/sp
+        # tokens per device — the workload-balance lever long context needs
+        bnd_dev = spec.bnd_bytes_per_sample * b_dev / sp
+        int_dev = spec.int_bytes_per_sample * b_dev / sp / tp
         if tp > 1:
             int_dev += cfg.tp_act_replicated_bnd * bnd_dev
         if strat.ckpt:
@@ -269,9 +299,9 @@ class CostModel:
         # ---- compute time ----------------------------------------------
         if spec.name in self.profiled_times:
             # profiled per-sample forward time (paper: batch x per-sample)
-            comp_fwd = self.profiled_times[spec.name] * b_dev / tp
+            comp_fwd = self.profiled_times[spec.name] * b_dev / sp / tp
         else:
-            flops_dev = spec.flops_per_sample * b_dev / tp
+            flops_dev = spec.flops_per_sample * b_dev / sp / tp
             comp_fwd = flops_dev / (dev.peak_flops * cfg.mfu)
         comp_bwd = 2.0 * comp_fwd
         recompute = comp_fwd if strat.ckpt else 0.0
@@ -285,7 +315,7 @@ class CostModel:
         tp_time_fwd = tp_time_bwd = 0.0
         if tp > 1:
             lat, bw = self._level_coeffs(strat, TP)
-            msg = spec.bnd_bytes_per_sample * b_dev
+            msg = spec.bnd_bytes_per_sample * b_dev / sp
             ar = lat + 2.0 * self._ring_factor(tp) * msg / bw
             tp_time_fwd = 2.0 * ar
             tp_time_bwd = 2.0 * ar
@@ -316,14 +346,43 @@ class CostModel:
             gbytes = cfg.bytes_per_param * params_dev
             dp_ar = lat + 2.0 * self._ring_factor(dp) * gbytes / bw
 
+        # SP: ring attention rotates the local K/V panel sp−1 times per
+        # forward (priced from the profiled ppermute pair); backward runs
+        # the ring again carrying dK/dV accumulators (~2x the traffic).
+        # Params are replicated across the sp group, so the last micro-
+        # batch also all-reduces gradients over it (DP-like term).
+        sp_ring_fwd = sp_ring_bwd = sp_ar = 0.0
+        if sp > 1:
+            lat_pp, bw_pp = self._level_coeffs(strat, SP)
+            panel = spec.kv_bytes_per_sample * b_dev / sp
+            sp_ring_fwd = (sp - 1) * (lat_pp + panel / bw_pp)
+            sp_ring_bwd = 2.0 * sp_ring_fwd
+            lat_sar, bw_sar = self._level_coeffs(strat, SP, "all_reduce")
+            gbytes = cfg.bytes_per_param * params_dev
+            sp_ar = lat_sar + 2.0 * self._ring_factor(sp) * gbytes / bw_sar
+
         # ---- assemble (overlap model, §V) -------------------------------
-        # forward: TP all-reduce blocks; SDP gather overlaps with compute
-        fwd = self._overlap(comp_fwd, sdp_ag_fwd) + tp_time_fwd
-        # recompute forward (CKPT) repeats TP collectives too
-        re_fwd = (self._overlap(recompute, 0.0) + tp_time_fwd) if strat.ckpt else 0.0
+        # forward: TP all-reduce blocks; SDP gather and the SP ring
+        # hand-off overlap with compute (the permute is issued before the
+        # round's kernel — see kernels/ring_attention.py)
+        fwd = self._overlap(comp_fwd, sdp_ag_fwd + sp_ring_fwd) + tp_time_fwd
+        # recompute forward (CKPT) repeats TP collectives + the SP ring too
+        re_fwd = (self._overlap(recompute, sp_ring_fwd) + tp_time_fwd) if strat.ckpt else 0.0
         # backward: DP/SDP gradient comm overlaps with compute
-        bwd_nosync = self._overlap(comp_bwd, sdp_ag_bwd) + tp_time_bwd
-        bwd_sync = self._overlap(comp_bwd, sdp_ag_bwd + sdp_rs + dp_ar) + tp_time_bwd
+        bwd_nosync = self._overlap(comp_bwd, sdp_ag_bwd + sp_ring_bwd) + tp_time_bwd
+        bwd_sync = self._overlap(
+            comp_bwd,
+            sdp_ag_bwd + sp_ring_bwd + sdp_rs + dp_ar + sp_ar) + tp_time_bwd
+
+        if not _sp_applicable(spec, sp) or (
+                cfg.min_samples_per_device > 0.0
+                and b_dev < cfg.min_samples_per_device):
+            # memory stays finite (the DP's bin weights must stay sane);
+            # the poison time keeps any such pair out of optimal plans
+            return LayerCosts(time=_SP_INVALID_TIME,
+                              time_nosync=_SP_INVALID_TIME,
+                              mem_f=mem_f, mem_b=mem_b, mem_ms=ms,
+                              time_fwd=_SP_INVALID_TIME)
 
         return LayerCosts(
             time=fwd + re_fwd + bwd_sync,
@@ -360,6 +419,7 @@ class CostModel:
         dp = np.array([s.dp for s in strategies], float)
         sdp = np.array([s.sdp for s in strategies], float)
         tp = np.array([s.tp for s in strategies], float)
+        spd = np.array([s.sp for s in strategies], float)
         total = np.array([s.total for s in strategies], float)
         ckpt = np.array([s.ckpt for s in strategies], bool)
         co = lambda pairs, i: np.array([p[i] for p in pairs])
@@ -367,20 +427,26 @@ class CostModel:
         c_ag = [self._level_coeffs(s, SDP, "all_gather") for s in strategies]
         c_rs = [self._level_coeffs(s, SDP, "reduce_scatter") for s in strategies]
         c_dp = [self._level_coeffs(s, DP) for s in strategies]
+        c_sp = [self._level_coeffs(s, SP) for s in strategies]
+        c_sar = [self._level_coeffs(s, SP, "all_reduce") for s in strategies]
         c_tot = [self._group_coeffs("all_gather", int(s.total))
                  for s in strategies]
         bw_tp, bw_ag, bw_rs = co(c_tp, 1), co(c_ag, 1), co(c_rs, 1)
         bw_dp, bw_tot = co(c_dp, 1), co(c_tot, 1)
+        bw_sp, bw_sar = co(c_sp, 1), co(c_sar, 1)
         # latency enters only where the paradigm is actually active — the
         # scalar path guards each comm term behind ``if deg > 1``
         lat_tp = np.where(tp > 1, co(c_tp, 0), 0.0)
         lat_ag = np.where(sdp > 1, co(c_ag, 0), 0.0)
         lat_rs = np.where(sdp > 1, co(c_rs, 0), 0.0)
         lat_dp = np.where(dp > 1, co(c_dp, 0), 0.0)
+        lat_sp = np.where(spd > 1, co(c_sp, 0), 0.0)
+        lat_sar = np.where(spd > 1, co(c_sar, 0), 0.0)
         lat_tot = np.where(total > 1, co(c_tot, 0), 0.0)
         ring_tp = np.where(tp > 1, (tp - 1) / tp, 0.0)
         ring_sdp = np.where(sdp > 1, (sdp - 1) / sdp, 0.0)
         ring_dp = np.where(dp > 1, (dp - 1) / dp, 0.0)
+        ring_spd = np.where(spd > 1, (spd - 1) / spd, 0.0)
         ring_tot = np.where(total > 1, (total - 1) / total, 0.0)
 
         # ---- per-layer vectors (L, 1) ---------------------------------
@@ -392,6 +458,10 @@ class CostModel:
         flops = col([sp.flops_per_sample for sp in specs])
         top_k = col([sp.top_k for sp in specs])
         moe = np.array([sp.n_experts > 1 for sp in specs]).reshape(L, 1)
+        kvb = col([sp.kv_bytes_per_sample for sp in specs])
+        seq_l = col([sp.seq_len for sp in specs])
+        sp_kind_ok = np.array([sp.kind != "ssm"
+                               for sp in specs]).reshape(L, 1)
         profiled = col([self.profiled_times.get(sp.name, np.nan)
                         for sp in specs])
 
@@ -401,8 +471,8 @@ class CostModel:
         ms = cfg.bytes_per_param_states * params_dev / sdp
 
         # ---- memory: activations --------------------------------------
-        bnd_dev = bnd * b_dev
-        int_dev = intb * b_dev / tp
+        bnd_dev = bnd * b_dev / spd
+        int_dev = intb * b_dev / spd / tp
         int_dev = np.where(tp > 1,
                            int_dev + cfg.tp_act_replicated_bnd * bnd_dev,
                            int_dev)
@@ -411,8 +481,8 @@ class CostModel:
 
         # ---- compute time ---------------------------------------------
         comp_fwd = np.where(np.isnan(profiled),
-                            (flops * b_dev / tp) / (dev.peak_flops * cfg.mfu),
-                            np.nan_to_num(profiled) * b_dev / tp)
+                            (flops * b_dev / spd / tp) / (dev.peak_flops * cfg.mfu),
+                            np.nan_to_num(profiled) * b_dev / spd / tp)
         comp_bwd = 2.0 * comp_fwd
         recompute = np.where(ckpt, comp_fwd, 0.0)
 
@@ -431,6 +501,16 @@ class CostModel:
         sdp_rs = lat_rs + ring_sdp * pbytes / bw_rs
         dp_ar = lat_dp + 2.0 * ring_dp * pbytes / bw_dp
 
+        # SP: sp−1 ppermute rounds of the local K/V panel (fwd), 2x on the
+        # backward ring, plus the sp-group gradient all-reduce — mirrors
+        # the scalar path's ``if sp > 1`` block
+        panel = kvb * b_dev / spd
+        sp_ring_fwd = np.where(spd > 1,
+                               (spd - 1) * (lat_sp + panel / bw_sp), 0.0)
+        sp_ring_bwd = 2.0 * sp_ring_fwd
+        sp_ar = np.where(spd > 1,
+                         lat_sar + 2.0 * ring_spd * pbytes / bw_sar, 0.0)
+
         # ---- assemble (overlap model, §V) ------------------------------
         sd = dev.overlap_slowdown
 
@@ -439,18 +519,28 @@ class CostModel:
                             np.where(comm <= 0.0, comp,
                                      np.maximum(comp * sd, comm * sd)))
 
-        fwd = overlap(comp_fwd, sdp_ag) + tp_time
-        re_fwd = np.where(ckpt, recompute + tp_time, 0.0)
-        bwd_nosync = overlap(comp_bwd, sdp_ag) + tp_time
-        bwd_sync = overlap(comp_bwd, sdp_ag + sdp_rs + dp_ar) + tp_time
+        fwd = overlap(comp_fwd, sdp_ag + sp_ring_fwd) + tp_time
+        re_fwd = np.where(ckpt, overlap(recompute, sp_ring_fwd) + tp_time, 0.0)
+        bwd_nosync = overlap(comp_bwd, sdp_ag + sp_ring_bwd) + tp_time
+        bwd_sync = overlap(
+            comp_bwd, sdp_ag + sp_ring_bwd + sdp_rs + dp_ar + sp_ar) + tp_time
+
+        # pairs SP cannot execute get the scalar path's poison time
+        sp_bad = (spd > 1) & ~((seq_l > 0)
+                               & (np.mod(seq_l, spd) == 0) & sp_kind_ok)
+        if cfg.min_samples_per_device > 0.0:
+            # physical floor: DP/SDP cannot split one sample (see config)
+            sp_bad = sp_bad | (b_dev < cfg.min_samples_per_device)
 
         # ---- reshard (layout-transformation) cost ----------------------
         reshard = lat_tot + 2.0 * ring_tot * (bnd * micro_batch_size / total) / bw_tot
 
         return CostTables(
-            time_sync=fwd + re_fwd + bwd_sync,
-            time_nosync=fwd + re_fwd + bwd_nosync,
-            time_fwd=fwd,
+            time_sync=np.where(sp_bad, _SP_INVALID_TIME,
+                               fwd + re_fwd + bwd_sync),
+            time_nosync=np.where(sp_bad, _SP_INVALID_TIME,
+                                 fwd + re_fwd + bwd_nosync),
+            time_fwd=np.where(sp_bad, _SP_INVALID_TIME, fwd),
             mem_f=mem_f,
             mem_b=mem_b,
             mem_ms=ms,

@@ -50,6 +50,7 @@ def construct_search_space(
     prune_dp_sdp: bool = True,
     max_pp: int | None = None,
     max_tp: int | None = None,
+    max_sp: int | None = None,
 ) -> SearchSpace:
     per_pp: Dict[int, List[Strategy]] = {}
     for pp in pp_degree_candidates(n_devices, max_pp):
@@ -62,5 +63,7 @@ def construct_search_space(
         )
         if max_tp is not None:
             strategies = [s for s in strategies if s.tp <= max_tp]
+        if max_sp is not None:
+            strategies = [s for s in strategies if s.sp <= max_sp]
         per_pp[pp] = strategies
     return SearchSpace(n_devices=n_devices, per_pp=per_pp)

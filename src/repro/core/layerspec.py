@@ -33,6 +33,9 @@ class LayerSpec:
     seq_len: int = 0
     # fraction of params that TP can shard (embeddings/norms are replicated)
     tp_frac: float = 1.0
+    # K+V panel bytes per sample (full sequence) — the payload one ring-
+    # attention hand-off moves per sp shard; 0 for layers without attention
+    kv_bytes_per_sample: float = 0.0
     # MoE bookkeeping (expert params can additionally be expert-sharded)
     n_experts: int = 0
     top_k: int = 0
@@ -116,7 +119,8 @@ def dense_layer(name: str, seq: int, d: int, n_heads: int, n_kv: int,
     return LayerSpec(name=name, kind="attn_mlp", param_count=params,
                      flops_per_sample=flops, bnd_bytes_per_sample=bnd,
                      int_bytes_per_sample=inter, seq_len=seq,
-                     tp_frac=(p_attn + p_mlp) / params)
+                     tp_frac=(p_attn + p_mlp) / params,
+                     kv_bytes_per_sample=2 * seq * kv_dim * BYTES_ACT)
 
 
 def moe_layer(name: str, seq: int, d: int, n_heads: int, n_kv: int,
@@ -161,7 +165,8 @@ def moe_layer(name: str, seq: int, d: int, n_heads: int, n_kv: int,
                      int_bytes_per_sample=inter, seq_len=seq,
                      tp_frac=(p_attn + p_expert + p_shared + p_dense) / params,
                      n_experts=n_experts, top_k=top_k,
-                     expert_param_frac=p_expert / params)
+                     expert_param_frac=p_expert / params,
+                     kv_bytes_per_sample=2 * seq * kv_dim * BYTES_ACT)
 
 
 def ssm_layer(name: str, seq: int, d: int, *, d_state: int = 128,
@@ -253,6 +258,7 @@ def merge(name: str, *specs: LayerSpec) -> LayerSpec:
         seq_len=specs[0].seq_len,
         tp_frac=(sum(s.tp_frac * s.param_count for s in specs)
                  / max(1.0, sum(s.param_count for s in specs))),
+        kv_bytes_per_sample=sum(s.kv_bytes_per_sample for s in specs),
         n_experts=max(s.n_experts for s in specs),
         top_k=max(s.top_k for s in specs),
         expert_param_frac=(sum(s.expert_param_frac * s.param_count for s in specs)

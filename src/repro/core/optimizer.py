@@ -25,7 +25,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .cost_model import (CostModel, CostModelConfig, CostTables,
-                         _drain_divisor, pipeline_iter_time)
+                         _SP_INVALID_TIME, _drain_divisor,
+                         pipeline_iter_time)
 from .decision_tree import SearchSpace, construct_search_space
 from .dp_search import (StageSearchResult, dp_search_stage_budgets,
                         dp_search_stage_budgets_batch)
@@ -39,7 +40,7 @@ from .pipeline_balance import (PartitionEval, adjust_partition,
                                time_balanced_partition,
                                validate_adjustment)
 from .plan import ParallelPlan
-from .strategy import PARADIGMS, Strategy, strategy_set_id
+from .strategy import PARADIGMS, SP, Strategy, strategy_set_id
 
 INF = float("inf")
 
@@ -85,6 +86,11 @@ class OptimizerConfig:
     paradigms: Sequence[str] = PARADIGMS      # which of DP/SDP/TP to search
     allow_ckpt: bool = True
     use_pp: bool = True                        # False => PP degree fixed to 1
+    # sequence parallelism (ring attention) as a fourth searched paradigm;
+    # opt-in: appends "sp" to ``paradigms`` so the decision tree grows the
+    # SP branch (the paper-count leaf sets stay untouched by default)
+    use_sp: bool = False
+    max_sp: Optional[int] = None
     bi_objective: bool = True                  # BMW partition refinement
     schedule: str = "1f1b"          # or "gpipe" / "1f1b-interleaved" / "zb-h1"
     # pipeline-schedule search axis: candidate schedule names swept per
@@ -185,12 +191,16 @@ class GalvatronOptimizer:
         self._cost_config = cost_config      # kept for process-pool workers
         self.cost = CostModel(cluster, cost_config,
                               profiled_times=profiled_times)
+        paradigms = tuple(self.cfg.paradigms)
+        if self.cfg.use_sp and SP not in paradigms:
+            paradigms = paradigms + (SP,)
         self.search_space = construct_search_space(
             cluster.n_devices,
-            paradigms=self.cfg.paradigms,
+            paradigms=paradigms,
             allow_ckpt=self.cfg.allow_ckpt,
             max_pp=(1 if not self.cfg.use_pp else self.cfg.max_pp),
             max_tp=self.cfg.max_tp,
+            max_sp=self.cfg.max_sp,
         )
         self.stats: Dict[str, float] = {
             "stage_searches": 0,        # dp_search_stage requests
@@ -692,7 +702,10 @@ class GalvatronOptimizer:
                     part = queue.pop(0)
                     iters += 1
                     t, ev, strats = ev_of(part)[k]
-                    if ev.feasible and t < INF:
+                    # a plan priced at the invalid-strategy poison time is
+                    # one the runtime cannot execute (SP-inapplicable layer
+                    # or sub-physical per-device batch) — not feasible
+                    if ev.feasible and t < _SP_INVALID_TIME:
                         if best[k] is None or B / t > best[k].est_throughput:
                             a_t, a_m = balance_degrees(ev.stage_times,
                                                        ev.stage_mems)
@@ -701,6 +714,11 @@ class GalvatronOptimizer:
                                 pp_degree=P, partition=list(part),
                                 strategies=strats, global_batch=B, n_micro=m,
                                 schedule=sched, vpp_degree=vpp,
+                                sp_degree=max((s.sp for s in strats),
+                                              default=1),
+                                seq_len=max((sp.seq_len
+                                             for sp in self.specs),
+                                            default=0),
                                 est_iter_time=t, est_throughput=B / t,
                                 est_stage_mem=ev.stage_mems,
                                 alpha_t=a_t, alpha_m=a_m)

@@ -11,10 +11,16 @@ JSON format versioning (full schema + compat table: docs/plan-format.md):
     (TP/PP per phase, decode batch, paged-KV page size / pool size).
     ``serving`` may be ``null``/absent — a v3 plan without it is a pure
     training plan.
+  * v4 (PR 9) — optional ``sp_degree`` (sequence-parallel / ring-attention
+    degree, default 1 = no sequence sharding) and ``seq_len`` (the
+    sequence length the plan was searched for, default 0 = unrecorded;
+    lint rule PLN011 checks ``seq_len % sp_degree == 0`` when both are
+    present).
 
 ``from_json`` reads every older version (missing keys default to the
 value that version implied: ``schedule="1f1b"``, ``vpp_degree=1``,
-``serving=None``); ``to_json`` always writes the current version.
+``serving=None``, ``sp_degree=1``, ``seq_len=0``); ``to_json`` always
+writes the current version.
 """
 from __future__ import annotations
 
@@ -25,7 +31,7 @@ from typing import Dict, List, Optional
 from .strategy import Strategy
 
 #: version stamp written by :meth:`ParallelPlan.to_json` (see module doc)
-PLAN_FORMAT_VERSION = 3
+PLAN_FORMAT_VERSION = 4
 
 
 @dataclasses.dataclass
@@ -112,6 +118,10 @@ class ParallelPlan:
     schedule: str = "1f1b"
     vpp_degree: int = 1                  # virtual chunks per stage (V);
                                          # > 1 only with "1f1b-interleaved"
+    sp_degree: int = 1                   # sequence-parallel (ring attention)
+                                         # degree; 1 = no sequence sharding
+    seq_len: int = 0                     # searched sequence length (tokens);
+                                         # 0 = unrecorded (pre-v4 plans)
 
     # estimator outputs (filled by the search)
     est_iter_time: float = 0.0
@@ -139,6 +149,9 @@ class ParallelPlan:
         if self.vpp_degree < 1:
             raise ValueError(
                 f"vpp_degree must be >= 1, got {self.vpp_degree}")
+        if self.sp_degree < 1:
+            raise ValueError(
+                f"sp_degree must be >= 1, got {self.sp_degree}")
 
     @property
     def micro_batch_size(self) -> int:
@@ -177,6 +190,8 @@ class ParallelPlan:
             "n_micro": self.n_micro,
             "schedule": self.schedule,
             "vpp_degree": self.vpp_degree,
+            "sp_degree": self.sp_degree,
+            "seq_len": self.seq_len,
             "est_iter_time": self.est_iter_time,
             "est_throughput": self.est_throughput,
             "est_stage_mem": self.est_stage_mem,
@@ -248,6 +263,9 @@ class ParallelPlan:
             schedule=d.get("schedule", "1f1b"),
             # PR-1-era plan JSON predates interleaved schedules
             vpp_degree=d.get("vpp_degree", 1),
+            # pre-v4 plan JSON predates sequence parallelism
+            sp_degree=d.get("sp_degree", 1),
+            seq_len=d.get("seq_len", 0),
             est_iter_time=d.get("est_iter_time", 0.0),
             est_throughput=d.get("est_throughput", 0.0),
             est_stage_mem=d.get("est_stage_mem"),

@@ -8,8 +8,10 @@ captures the bandwidth hierarchy); e.g. 2-way DP over 2-way TP places TP on
 the innermost (fastest) links.
 
 Paradigms: ``dp`` (data parallel), ``sdp`` (sharded data parallel / ZeRO-3),
-``tp`` (tensor parallel).  PP is handled one level up (it partitions the model
-into stages before per-layer search — Takeaway #1).
+``tp`` (tensor parallel), ``sp`` (sequence parallel — ring attention over a
+sequence-sharded axis; opt-in, see ``SP_PARADIGMS``).  PP is handled one
+level up (it partitions the model into stages before per-layer search —
+Takeaway #1).
 """
 from __future__ import annotations
 
@@ -20,7 +22,12 @@ from typing import Dict, Iterable, List, Sequence, Tuple
 DP = "dp"
 SDP = "sdp"
 TP = "tp"
+SP = "sp"
 PARADIGMS = (DP, SDP, TP)
+# SP widens the tree with a sequence-parallel branch.  It is opt-in (the
+# paper's 8-device leaf counts that tests pin are defined over DP/SDP/TP);
+# ``OptimizerConfig(use_sp=True)`` passes this tuple through instead.
+SP_PARADIGMS = (DP, SDP, TP, SP)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -49,6 +56,10 @@ class Strategy:
     @property
     def tp(self) -> int:
         return self.degree(TP)
+
+    @property
+    def sp(self) -> int:
+        return self.degree(SP)
 
     @property
     def total(self) -> int:

@@ -9,8 +9,14 @@ TPU adaptation notes (vs the CUDA flash-attention algorithm):
   * no warp-level shuffles: the reduction happens in-register per block,
     which is the natural systolic-array formulation.
 
-Context beyond ~8k per device should arrive already sequence-sharded
-(GSPMD), each shard calling this kernel on its local panel.
+Ragged lengths: S and T need not be block multiples — inputs are padded
+up to the block grid and the kernel masks out-of-range k positions
+(padded q rows are computed and sliced off).  Rows whose mask admits no
+key at all (tiny window + causal corners) produce exact zeros.
+
+Context beyond ~8k per device arrives sequence-sharded; each shard calls
+the ring variant (``kernels/ring_attention.py``) which walks the K/V
+panels around the ``seq`` mesh axis.
 """
 from __future__ import annotations
 
@@ -24,10 +30,30 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
+def _validate_attn_shapes(S: int, T: int, H: int, KV: int,
+                          window: Optional[int]) -> None:
+    """Reject genuinely unsupported shapes with descriptive errors."""
+    if KV <= 0 or H % KV != 0:
+        raise ValueError(
+            f"GQA requires n_heads divisible by n_kv_heads; got H={H}, "
+            f"KV={KV} (H % KV = {H % KV}) — integer grouping would "
+            f"silently mis-route queries to the wrong KV head")
+    if window is not None:
+        if window <= 0:
+            raise ValueError(
+                f"sliding window must be a positive span, got window="
+                f"{window} (every position would be masked)")
+        if window > T:
+            raise ValueError(
+                f"sliding window {window} exceeds the key length T={T}; "
+                f"pass window=None for full attention over this context")
+
+
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
                   window: Optional[int], block_q: int, block_k: int,
-                  seq_k: int):
+                  seq_k: int, kv_len: int):
     # q_ref: (block_q, dh); k_ref/v_ref: (seq_k, dh); o_ref: (block_q, dh)
+    # seq_k is the padded panel length; kv_len the number of real keys.
     iq = pl.program_id(2)
     q = q_ref[...].astype(jnp.float32) * scale
     q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
@@ -42,6 +68,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
         k_pos = ik * block_k + jax.lax.broadcasted_iota(
             jnp.int32, (1, block_k), 1)
         mask = jnp.ones((block_q, block_k), bool)
+        if kv_len < seq_k:                  # padded K/V tail: never attended
+            mask &= k_pos < kv_len
         if causal:
             mask &= k_pos <= q_pos
         if window is not None:
@@ -49,7 +77,9 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
         s = jnp.where(mask, s, NEG_INF)
         m_cur = jnp.max(s, axis=-1, keepdims=True)
         m_new = jnp.maximum(m_prev, m_cur)
-        p = jnp.exp(s - m_new)
+        # all-masked rows keep m_new == NEG_INF; exp(NEG_INF - NEG_INF)
+        # would be 1 with a finite sentinel, so zero those lanes explicitly
+        p = jnp.where(s > NEG_INF * 0.5, jnp.exp(s - m_new), 0.0)
         alpha = jnp.exp(m_prev - m_new)
         l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
         acc = acc * alpha + p @ v.astype(jnp.float32)
@@ -68,7 +98,18 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool,
     if window is not None:
         lo = jnp.maximum(0, (iq * block_q - window) // block_k)
     acc, m, l = jax.lax.fori_loop(lo, hi, body, init)
-    o_ref[...] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+    # rows with no admissible key (l == 0) are exact zeros, not acc/eps noise
+    o = jnp.where(l > 0.0, acc / jnp.where(l > 0.0, l, 1.0), 0.0)
+    o_ref[...] = o.astype(o_ref.dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, size: int) -> jax.Array:
+    pad = size - x.shape[axis]
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
@@ -77,32 +118,42 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: Optional[int] = None,
                     block_q: int = 128, block_k: int = 128,
                     interpret: bool = False) -> jax.Array:
-    """q (B,S,H,dh); k/v (B,T,KV,dh) -> (B,S,H,dh)."""
+    """q (B,S,H,dh); k/v (B,T,KV,dh) -> (B,S,H,dh).
+
+    Arbitrary (ragged) S/T are padded up to the block grid; out-of-range
+    keys are masked in-kernel and padded q rows sliced off the output.
+    """
     B, S, H, dh = q.shape
     T, KV = k.shape[1], k.shape[2]
+    _validate_attn_shapes(S, T, H, KV, window)
     G = H // KV
-    block_q = min(block_q, S)
-    block_k = min(block_k, T)
-    assert S % block_q == 0 and T % block_k == 0
+    block_q = min(block_q, -(-S // 8) * 8)
+    block_k = min(block_k, -(-T // 8) * 8)
+    S_pad = -(-S // block_q) * block_q
+    T_pad = -(-T // block_k) * block_k
+    q = _pad_to(q, 1, S_pad)
+    k = _pad_to(k, 1, T_pad)
+    v = _pad_to(v, 1, T_pad)
 
-    grid = (B, H, S // block_q)
+    grid = (B, H, S_pad // block_q)
     kernel = functools.partial(
         _flash_kernel, scale=1.0 / (dh ** 0.5), causal=causal, window=window,
-        block_q=block_q, block_k=block_k, seq_k=T)
+        block_q=block_q, block_k=block_k, seq_k=T_pad, kv_len=T)
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((None, block_q, None, dh),
                          lambda b, h, i: (b, i, h, 0)),
-            pl.BlockSpec((None, T, None, dh),
+            pl.BlockSpec((None, T_pad, None, dh),
                          lambda b, h, i, G=G: (b, 0, h // G, 0)),
-            pl.BlockSpec((None, T, None, dh),
+            pl.BlockSpec((None, T_pad, None, dh),
                          lambda b, h, i, G=G: (b, 0, h // G, 0)),
         ],
         out_specs=pl.BlockSpec((None, block_q, None, dh),
                                lambda b, h, i: (b, i, h, 0)),
-        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, S_pad, H, dh), q.dtype),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :S] if S_pad != S else out

@@ -12,6 +12,7 @@ from typing import Optional
 import jax
 
 from . import flash_attention as _fa
+from . import ring_attention as _ra
 from . import rmsnorm as _rn
 from . import ssd_scan as _ssd
 
@@ -26,6 +27,16 @@ def flash_attention(q, k, v, *, causal: bool = True,
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                block_q=block_q, block_k=block_k,
                                interpret=_interpret())
+
+
+def ring_flash_attention(q, k, v, *, axis_name: str = "seq", axis_size: int,
+                         causal: bool = True, window: Optional[int] = None,
+                         block_q: int = 128, block_k: int = 128):
+    """Sequence-sharded flash attention (call inside shard_map)."""
+    return _ra.ring_flash_attention(
+        q, k, v, axis_name=axis_name, axis_size=axis_size, causal=causal,
+        window=window, block_q=block_q, block_k=block_k,
+        interpret=_interpret())
 
 
 def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64):

@@ -26,6 +26,10 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
         mask &= kpos > qpos - window
     scores = jnp.where(mask[None, None, None], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1)
+    # rows with no visible key are exact zeros (matching the kernel's
+    # masked-row semantics), not a softmax average over the -1e30 sentinel
+    any_visible = mask.any(axis=-1)                          # (S,)
+    probs = jnp.where(any_visible[None, None, None, :, None], probs, 0.0)
     out = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
     return out.reshape(B, S, H, dh).astype(q.dtype)
 

@@ -1,0 +1,211 @@
+"""Ring attention: flash attention over a sequence-sharded mesh axis.
+
+Each device holds a local q shard and a local K/V panel of the sequence.
+The panels rotate around the ``seq`` mesh axis with ``lax.ppermute`` —
+the same ring hand-off the pipeline runtime uses: the permute on the
+current panel is issued *before* the round's compute, so the collective
+has no data dependency on it and XLA overlaps the send/recv with the
+flash kernel of the round in flight.
+
+Every round runs a *partial* flash kernel over (local q, visiting K/V
+panel) that returns the un-normalized online-softmax state (acc, m, l);
+rounds merge states with the standard log-sum-exp combine, and after
+P − 1 hand-offs (P = axis size) every device has attended its q shard to
+the full global sequence.  The result is token-identical to running the
+single-device ``flash_attention`` on the gathered sequence.
+
+Masks are expressed through ``delta = q_start − k_start`` (the offset of
+the local q shard against the visiting panel's global origin), the only
+dynamic quantity the kernel needs: ``k_global <= q_global`` is exactly
+``k_local <= q_local + delta``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.flash_attention import (NEG_INF, _pad_to,
+                                           _validate_attn_shapes)
+
+
+def _partial_kernel(delta_ref, q_ref, k_ref, v_ref,
+                    acc_ref, m_ref, l_ref, *, scale: float, causal: bool,
+                    window: Optional[int], block_q: int, block_k: int,
+                    seq_k: int, kv_len: int):
+    # delta_ref: (1, 1) int32 — q_start − k_start in global positions.
+    # Outputs are the raw online-softmax state: acc (block_q, dh) fp32,
+    # m / l (block_q, 1) fp32.  Rows the mask fully rejects keep
+    # m == NEG_INF, l == 0, acc == 0, which the cross-round merge and the
+    # final normalization treat as an exact zero contribution.
+    iq = pl.program_id(2)
+    delta = delta_ref[0, 0]
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_pos = (iq * block_q + delta
+             + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0))
+
+    n_k = seq_k // block_k
+
+    def body(ik, carry):
+        acc, m_prev, l_prev = carry
+        k = pl.load(k_ref, (pl.dslice(ik * block_k, block_k), slice(None)))
+        v = pl.load(v_ref, (pl.dslice(ik * block_k, block_k), slice(None)))
+        s = q @ k.astype(jnp.float32).T                       # (bq, bk)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        mask = jnp.ones((block_q, block_k), bool)
+        if kv_len < seq_k:
+            mask &= k_pos < kv_len
+        if causal:
+            mask &= k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.where(s > NEG_INF * 0.5, jnp.exp(s - m_new), 0.0)
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+        acc = acc * alpha + p @ v.astype(jnp.float32)
+        return acc, m_new, l_new
+
+    dh = q_ref.shape[-1]
+    init = (jnp.zeros((block_q, dh), jnp.float32),
+            jnp.full((block_q, 1), NEG_INF, jnp.float32),
+            jnp.zeros((block_q, 1), jnp.float32))
+    # delta is dynamic (it changes per ring round), so no static block
+    # skipping here — masking alone decides admissibility.
+    acc, m, l = jax.lax.fori_loop(0, n_k, body, init)
+    acc_ref[...] = acc
+    m_ref[...] = m
+    l_ref[...] = l
+
+
+def _flash_partial(q: jax.Array, k: jax.Array, v: jax.Array,
+                   delta: jax.Array, *, causal: bool,
+                   window: Optional[int], block_q: int, block_k: int,
+                   interpret: bool) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One panel visit: (acc, m, l) of local q against one K/V panel."""
+    B, S, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, -(-S // 8) * 8)
+    block_k = min(block_k, -(-T // 8) * 8)
+    S_pad = -(-S // block_q) * block_q
+    T_pad = -(-T // block_k) * block_k
+    q = _pad_to(q, 1, S_pad)
+    k = _pad_to(k, 1, T_pad)
+    v = _pad_to(v, 1, T_pad)
+    delta = jnp.reshape(delta, (1, 1)).astype(jnp.int32)
+
+    grid = (B, H, S_pad // block_q)
+    kernel = functools.partial(
+        _partial_kernel, scale=1.0 / (dh ** 0.5), causal=causal,
+        window=window, block_q=block_q, block_k=block_k, seq_k=T_pad,
+        kv_len=T)
+
+    acc, m, l = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda b, h, i: (0, 0)),
+            pl.BlockSpec((None, block_q, None, dh),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, T_pad, None, dh),
+                         lambda b, h, i, G=G: (b, 0, h // G, 0)),
+            pl.BlockSpec((None, T_pad, None, dh),
+                         lambda b, h, i, G=G: (b, 0, h // G, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, block_q, None, dh),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, block_q, None, 1),
+                         lambda b, h, i: (b, i, h, 0)),
+            pl.BlockSpec((None, block_q, None, 1),
+                         lambda b, h, i: (b, i, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S_pad, H, dh), jnp.float32),
+            jax.ShapeDtypeStruct((B, S_pad, H, 1), jnp.float32),
+            jax.ShapeDtypeStruct((B, S_pad, H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(delta, q, k, v)
+    if S_pad != S:
+        acc, m, l = acc[:, :S], m[:, :S], l[:, :S]
+    return acc, m, l
+
+
+def _merge(state, part):
+    """Log-sum-exp combine of two online-softmax states.
+
+    Fully-masked states carry m == NEG_INF with acc == 0, l == 0; the
+    exp() of a NEG_INF gap underflows to an exact 0 coefficient, so they
+    merge as identity elements without special-casing.
+    """
+    acc_a, m_a, l_a = state
+    acc_b, m_b, l_b = part
+    m_new = jnp.maximum(m_a, m_b)
+    ca = jnp.exp(m_a - m_new)
+    cb = jnp.exp(m_b - m_new)
+    return (acc_a * ca + acc_b * cb, m_new, l_a * ca + l_b * cb)
+
+
+def ring_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         axis_name: str = "seq", axis_size: int,
+                         causal: bool = True, window: Optional[int] = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """Sequence-sharded flash attention; call inside ``shard_map``.
+
+    q (B, S/P, H, dh); k/v (B, T/P, KV, dh) — local shards of a sequence
+    split over the ``axis_name`` mesh axis of size ``axis_size`` (= P).
+    Returns the local (B, S/P, H, dh) output shard, token-identical to
+    ``flash_attention`` on the gathered sequence.
+
+    P − 1 ``ppermute`` rounds rotate the K/V panels; each round's
+    hand-off is issued before its compute so the collective overlaps the
+    kernel (the pipeline runtime's hand-off idiom).  Causally dead
+    visits (a panel entirely in this shard's future) still run but
+    contribute an all-masked zero state — the merge ignores them.
+    """
+    P = int(axis_size)
+    B, S_loc, H, dh = q.shape
+    T_loc, KV = k.shape[1], k.shape[2]
+    _validate_attn_shapes(S_loc * P, T_loc * P, H, KV, window)
+    if P == 1:
+        from repro.kernels.flash_attention import flash_attention
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=interpret)
+
+    idx = jax.lax.axis_index(axis_name)
+    q_start = idx * S_loc
+    perm = [(i, (i + 1) % P) for i in range(P)]
+
+    state = (jnp.zeros((B, S_loc, H, dh), jnp.float32),
+             jnp.full((B, S_loc, H, 1), NEG_INF, jnp.float32),
+             jnp.zeros((B, S_loc, H, 1), jnp.float32))
+    k_cur, v_cur = k, v
+    for r in range(P):
+        if r < P - 1:
+            # hand-off overlap: rotate the panel we already consumed a
+            # copy of BEFORE this round's kernel — no data dependency,
+            # so the collective runs under the compute
+            k_nxt = jax.lax.ppermute(k_cur, axis_name, perm)
+            v_nxt = jax.lax.ppermute(v_cur, axis_name, perm)
+        src = (idx - r) % P               # original owner of k_cur/v_cur
+        delta = q_start - src * T_loc
+        part = _flash_partial(q, k_cur, v_cur, delta, causal=causal,
+                              window=window, block_q=block_q,
+                              block_k=block_k, interpret=interpret)
+        state = _merge(state, part)
+        if r < P - 1:
+            k_cur, v_cur = k_nxt, v_nxt
+
+    acc, _, l = state
+    o = jnp.where(l > 0.0, acc / jnp.where(l > 0.0, l, 1.0), 0.0)
+    return o.astype(q.dtype)

@@ -41,6 +41,19 @@ def make_pipeline_mesh(n_stages: int = 2, n_data: int = 4):
     return _mk((n_stages, n_data), ("pipe", "data"))
 
 
+def make_ring_mesh(n_seq: int = 0, n_data: int = 1):
+    """DP x SP mesh for ring-attention sequence parallelism.
+
+    The ``seq`` axis carries the searched ``plan.sp_degree``: K/V panels
+    rotate around it (runtime/sequence.py) and batch token dims shard
+    over it (runtime/sharding.py).  ``n_seq=0`` takes every device left
+    after the ``data`` axis.
+    """
+    n = len(jax.devices())
+    n_seq = n_seq or n // n_data
+    return _mk((n_data, n_seq), ("data", "seq"))
+
+
 def make_local_mesh(model: int = 1):
     """Whatever this host offers (examples, smoke tests)."""
     n = len(jax.devices())

@@ -156,7 +156,16 @@ def build_optimizer(specs, cluster, args) -> GalvatronOptimizer:
     if getattr(args, "jobs", 0):
         ocfg.jobs = args.jobs
     ocfg.prune_batch_axis = bool(getattr(args, "prune", False))
-    return GalvatronOptimizer(specs, cluster, ocfg)
+    if getattr(args, "sp", False):
+        ocfg.use_sp = True
+    if getattr(args, "max_sp", 0):
+        ocfg.max_sp = args.max_sp
+    cost_cfg = None
+    if getattr(args, "min_samples_per_device", 0.0):
+        from repro.core.cost_model import CostModelConfig
+        cost_cfg = CostModelConfig(
+            min_samples_per_device=args.min_samples_per_device)
+    return GalvatronOptimizer(specs, cluster, ocfg, cost_cfg)
 
 
 def main(argv=None) -> int:
@@ -242,6 +251,21 @@ def main(argv=None) -> int:
                          "from P")
     ap.add_argument("--max-pp", type=int, default=0,
                     help="cap the searched pipeline degree (0 = no cap)")
+    ap.add_argument("--sp", action="store_true",
+                    help="add ring-attention sequence parallelism to the "
+                         "searched paradigms (plan format v4 sp_degree; "
+                         "needed for long contexts where no sp=1 plan "
+                         "fits the budget — docs/architecture.md §SP)")
+    ap.add_argument("--max-sp", type=int, default=0,
+                    help="cap the searched sequence-parallel degree "
+                         "(0 = no cap; implies nothing without --sp)")
+    ap.add_argument("--min-samples-per-device", type=float, default=0.0,
+                    help="physical per-device batch floor: reject "
+                         "strategies whose DP/SDP span leaves fewer "
+                         "samples per device (data parallelism cannot "
+                         "split one sequence; set 1.0 for long-context "
+                         "searches so SP is priced honestly; 0 = the "
+                         "paper's unconstrained linear model)")
     ap.add_argument("--schedules", default="",
                     help="comma list of pipeline-schedule candidates the "
                          "search sweeps per (B, P): any of gpipe, 1f1b, "

@@ -141,13 +141,25 @@ def sdpa_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
 def attention(p, x: jax.Array, positions: jax.Array, cfg: ModelConfig, *,
               causal: bool = True,
               window: Optional[int] = None,
-              impl: str = "auto") -> jax.Array:
-    """Full-sequence (train / prefill) self-attention."""
+              impl: str = "auto",
+              sp_axis: str = "seq", sp_size: int = 1) -> jax.Array:
+    """Full-sequence (train / prefill) self-attention.
+
+    ``impl="ring"`` runs sequence-parallel ring attention: x/positions are
+    this shard's slice of a sequence split over the ``sp_axis`` mesh axis
+    (size ``sp_size``), and the call must sit inside ``shard_map``
+    (``runtime/sequence.py``).  ``positions`` must be the shard's absolute
+    token positions so RoPE agrees with the single-device kernel.
+    """
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, x, cfg, positions)
     if impl == "auto":
         impl = "chunked" if S >= 1024 else "ref"
-    if impl == "flash":
+    if impl == "ring":
+        from repro.kernels.ops import ring_flash_attention as _ring
+        out = _ring(q, k, v, causal=causal, window=window,
+                    axis_name=sp_axis, axis_size=sp_size)
+    elif impl == "flash":
         from repro.kernels.ops import flash_attention as _flash
         out = _flash(q, k, v, causal=causal, window=window)
     elif impl == "chunked":

@@ -7,6 +7,7 @@ from .pipeline import (make_pipeline_loss, make_pipeline_loss_from_program,
                        stage_split_params)
 from .schedules import (PHASE_B, PHASE_F, PHASE_W, SCHEDULE_NAMES,
                         ScheduleProgram, compile_schedule, zb_w_pending_max)
+from .sequence import ring_attention_on_mesh, seq_axis_size
 from .sharding import (ShardPolicy, batch_shardings, decode_state_shardings,
                        opt_shardings, paged_state_shardings, param_shardings)
 
@@ -19,4 +20,5 @@ __all__ = ["BuiltStep", "PHASE_B", "PHASE_F", "PHASE_W", "SCHEDULE_NAMES",
            "make_paged_prefill_step", "make_pipeline_loss",
            "make_pipeline_loss_from_program", "make_prefill_step",
            "make_serve_step", "make_train_step", "opt_shardings",
-           "paged_state_shardings", "param_shardings", "stage_split_params"]
+           "paged_state_shardings", "param_shardings",
+           "ring_attention_on_mesh", "seq_axis_size", "stage_split_params"]

@@ -9,7 +9,11 @@ bridge reduces each segment's strategies to their dominant choice:
   * ZeRO (SDP) on the batch axes iff the majority of layers use sdp > 1,
   * remat per segment iff the majority of the segment's layers have CKPT,
   * sequence parallelism iff the modeled stash exceeds the HBM budget
-    (the §Perf policy rule).
+    (the §Perf policy rule),
+  * ring-attention SP degree copied verbatim from ``plan.sp_degree``
+    (the searched axis, format v4) — the executor shards token dims over
+    the mesh's ``seq`` axis and runs the ring kernel via
+    runtime/sequence.py.
 """
 from __future__ import annotations
 
@@ -58,7 +62,7 @@ def policy_from_plan(cfg: ModelConfig, plan: ParallelPlan, *,
             hbm_capacity=hbm_capacity)
         seq_shard = not mm.fits      # §Perf rule: only when stash overflows
     return ShardPolicy(tp=tp, zero=zero, remat_segments=tuple(remat),
-                       seq_shard=seq_shard)
+                       seq_shard=seq_shard, sp_degree=plan.sp_degree)
 
 
 def schedule_program_from_plan(plan: ParallelPlan, *,

@@ -1,0 +1,56 @@
+"""Sequence-parallel (ring attention) mesh execution.
+
+Bridges the searched ``sp_degree`` to actual devices: a mesh with a
+``seq`` axis shards the token dimension of ``(B, S, H, dh)`` activations,
+and :func:`ring_attention_on_mesh` wraps the ring kernel
+(``kernels/ring_attention.py``) in ``shard_map`` so K/V panels rotate
+around the axis while queries stay resident.  Per-device activation
+memory drops by ``sp_degree`` — the axis the long-context search trades
+against TP/PP/DP (docs/architecture.md §SP).
+
+The wrapper takes and returns GLOBAL arrays; ``shard_map`` splits them
+over ``seq`` and the kernel reconstructs global token positions from
+``jax.lax.axis_index``.  Output is token-identical to the single-device
+flash kernel (differential-tested in tests/test_ring_attention.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.runtime.pipeline import shard_map
+
+
+def seq_axis_size(mesh: Mesh) -> int:
+    """Size of the mesh's ``seq`` axis (1 when absent)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get("seq", 1)
+
+
+def ring_attention_on_mesh(mesh: Mesh, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           block_q: int = 128, block_k: int = 128):
+    """Build ``fn(q, k, v) -> out`` running ring attention over ``mesh``.
+
+    ``q``/``k``/``v`` are global ``(B, S, H|KV, dh)`` arrays; S must be
+    divisible by the ``seq`` axis size (lint rule PLN011 enforces the
+    matching plan-level constraint).  With no ``seq`` axis (or size 1)
+    this degrades to the single-device flash kernel.
+    """
+    from repro.kernels.ops import flash_attention, ring_flash_attention
+
+    sp = seq_axis_size(mesh)
+    if sp <= 1:
+        def dense(q, k, v):
+            return flash_attention(q, k, v, causal=causal, window=window,
+                                   block_q=block_q, block_k=block_k)
+        return dense
+
+    def local(q, k, v):
+        return ring_flash_attention(
+            q, k, v, axis_name="seq", axis_size=sp, causal=causal,
+            window=window, block_q=block_q, block_k=block_k)
+
+    spec = P(None, "seq", None, None)
+    return shard_map(local, mesh, in_specs=(spec, spec, spec),
+                     out_specs=spec)

@@ -11,7 +11,10 @@ as follows (DESIGN.md §3):
   * DP level  -> batch dims sharded along ``data`` (+``pod``), params
                  replicated across it,
   * CKPT      -> jax.checkpoint per layer-stack segment,
-  * PP        -> the shard_map pipeline runtime (runtime/pipeline.py).
+  * PP        -> the shard_map pipeline runtime (runtime/pipeline.py),
+  * SP        -> batch token dims sharded along a ``seq`` axis; attention
+                 runs the ring kernel (kernels/ring_attention.py) via
+                 runtime/sequence.py.
 
 Every rule checks divisibility and falls back to replication, so any
 (architecture x shape x mesh) combination lowers.
@@ -36,11 +39,17 @@ class ShardPolicy:
     expert_axis: str = "model"     # mesh axis carrying the expert dimension
     seq_shard: bool = False        # Megatron-style sequence parallelism on
                                    # the residual stream (stash /16)
+    sp_degree: int = 1             # ring-attention sequence parallelism: the
+                                   # searched plan.sp_degree — batch seq dims
+                                   # shard over the mesh's "seq" axis and
+                                   # attention runs the ring kernel
+                                   # (kernels/ring_attention.py)
 
     @staticmethod
     def from_strategy(strategy, remat_segments=None) -> "ShardPolicy":
         return ShardPolicy(tp=strategy.tp > 1, zero=strategy.sdp > 1,
-                           remat_segments=tuple(remat_segments or ()) or None)
+                           remat_segments=tuple(remat_segments or ()) or None,
+                           sp_degree=getattr(strategy, "sp", 1))
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -150,14 +159,26 @@ def _path_has(path, key: str) -> bool:
     return False
 
 
-def batch_shardings(abstract_batch, mesh: Mesh):
-    """Shard every leading batch dimension over the batch axes."""
+def batch_shardings(abstract_batch, mesh: Mesh,
+                    pol: Optional[ShardPolicy] = None):
+    """Shard every leading batch dimension over the batch axes.
+
+    When the mesh carries a ``seq`` axis and the policy prescribes
+    ring-attention sequence parallelism (``pol.sp_degree > 1``), dim 1 —
+    the token dimension of ``(B, S, ...)`` batches — additionally shards
+    over ``seq``, so each device materialises only its ``S / sp`` token
+    panel (the plan's activation-memory ÷ sp_degree claim)."""
     bt = batch_axes(mesh)
+    seq = ("seq" if (pol is not None and pol.sp_degree > 1
+                     and "seq" in mesh.axis_names) else None)
 
     def leaf(path, x):
+        entries = [None] * x.ndim
         if x.ndim >= 1 and bt and x.shape[0] % _axis_size(mesh, bt) == 0:
-            return NamedSharding(mesh, P(bt, *([None] * (x.ndim - 1))))
-        return NamedSharding(mesh, P())
+            entries[0] = bt
+        if seq and x.ndim >= 2 and x.shape[1] % _axis_size(mesh, seq) == 0:
+            entries[1] = seq
+        return NamedSharding(mesh, P(*entries))
 
     return jax.tree_util.tree_map_with_path(leaf, abstract_batch)
 

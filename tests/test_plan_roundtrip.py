@@ -45,7 +45,7 @@ def test_format_version_stamp_and_zb_h1_roundtrip():
 
     plan = _plan(schedule="zb-h1")
     d = plan.to_json()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 3
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
     plan2 = ParallelPlan.loads(plan.dumps())
     assert plan2 == plan and plan2.schedule == "zb-h1"
     # v0/v1 readers' keys are all still present (additive evolution only)
@@ -53,7 +53,26 @@ def test_format_version_stamp_and_zb_h1_roundtrip():
                 "global_batch", "n_micro", "schedule", "vpp_degree"):
         assert key in d, key
     # the canonical byte-oracle includes the stamp on both sides
-    assert json.loads(plan.canonical_dumps())["format_version"] == 3
+    assert json.loads(plan.canonical_dumps())["format_version"] == 4
+
+
+def test_v3_json_without_sp_degree_still_loads():
+    d = _plan().to_json()
+    del d["sp_degree"]                # v3-era plan JSON has no sp keys
+    del d["seq_len"]
+    d["format_version"] = 3
+    plan = ParallelPlan.from_json(d)
+    assert plan.sp_degree == 1
+    assert plan.seq_len == 0
+
+
+def test_sp_degree_roundtrips_and_validates():
+    plan = _plan(sp_degree=4, seq_len=65536)
+    plan2 = ParallelPlan.loads(plan.dumps())
+    assert plan2 == plan
+    assert plan2.sp_degree == 4 and plan2.seq_len == 65536
+    with pytest.raises(ValueError, match="sp_degree"):
+        _plan(sp_degree=0)
 
 
 def test_v2_json_without_serving_still_loads():

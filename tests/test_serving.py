@@ -143,7 +143,7 @@ def test_v3_serving_roundtrip():
     from repro.core import PLAN_FORMAT_VERSION, ParallelPlan
     plan = _serving_plan()
     d = json.loads(plan.dumps())
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 3
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
     back = ParallelPlan.from_json(d)
     assert back.serving == plan.serving
     assert back.canonical_dumps() == plan.canonical_dumps()
@@ -162,9 +162,10 @@ def test_v2_plans_still_load_with_no_serving():
 def test_detect_format_version_serving():
     from repro.analysis import detect_format_version
     d = json.loads(_serving_plan().dumps())
-    assert detect_format_version(d) == 3
+    assert detect_format_version(d) == 4
     d.pop("format_version")
-    assert detect_format_version(d) == 3      # serving section implies v3
+    # unstamped + default sp_degree/seq_len: the serving section implies v3
+    assert detect_format_version(d) == 3
 
 
 def test_pln010_valid_serving_plan_certifies():
@@ -235,7 +236,7 @@ def test_slo_sweep_emits_certifying_v3_plans(slo_points):
     assert feasible, "no SLO point feasible on the 8-GPU paper cluster"
     for pt in feasible:
         d = json.loads(pt.plan.dumps())
-        assert d["format_version"] == 3
+        assert d["format_version"] == 4
         diags = verify_plan_json(d)
         assert not [x for x in diags if x.severity == "error"], \
             [x.format() for x in diags]

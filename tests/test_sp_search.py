@@ -1,0 +1,230 @@
+"""Sequence parallelism as a searched axis: cost-model SP terms, the
+opt-in search-space extension, the physical per-device batch floor, the
+long-context feasibility flip (the PR's acceptance criterion), PLN011
+lint, and the plan -> runtime policy bridge."""
+import numpy as np
+import pytest
+
+from repro.core import CLUSTERS, GalvatronOptimizer, ParallelPlan, Strategy
+from repro.core.cost_model import (CostModel, CostModelConfig,
+                                   _SP_INVALID_TIME)
+from repro.core.layerspec import dense_layer
+from repro.core.optimizer import OptimizerConfig
+from repro.core.strategy import PARADIGMS, SP, SP_PARADIGMS
+
+GB = 1024 ** 3
+CLUSTER = CLUSTERS["8x-rtx-titan-pcie"]
+
+
+def _spec(seq=4096):
+    return dense_layer("body", seq, 1024, 16, 4, 4096)
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_sp_paradigm_is_opt_in():
+    assert SP not in PARADIGMS           # paper leaf counts preserved
+    assert SP_PARADIGMS == PARADIGMS + (SP,)
+    opt = GalvatronOptimizer([_spec()], CLUSTER, OptimizerConfig())
+    assert all(s.sp == 1
+               for pp in opt.search_space.per_pp.values() for s in pp)
+    opt_sp = GalvatronOptimizer([_spec()], CLUSTER,
+                                OptimizerConfig(use_sp=True))
+    assert any(s.sp > 1
+               for pp in opt_sp.search_space.per_pp.values() for s in pp)
+
+
+def test_max_sp_caps_the_searched_degree():
+    opt = GalvatronOptimizer([_spec()], CLUSTER,
+                             OptimizerConfig(use_sp=True, max_sp=2))
+    sps = {s.sp for pp in opt.search_space.per_pp.values() for s in pp}
+    assert max(sps) == 2
+
+
+def test_sp_divides_activation_memory_and_prices_ring_comm():
+    cm = CostModel(CLUSTER)
+    spec = _spec()
+    plain = cm.layer_costs(spec, Strategy((("dp", 1),), ckpt=False), 4.0)
+    sp4 = cm.layer_costs(spec, Strategy((("sp", 4),), ckpt=False), 4.0)
+    # activations shrink by exactly sp (params replicate, so ms is equal)
+    assert sp4.mem_f == pytest.approx(plain.mem_f / 4)
+    assert sp4.mem_ms == plain.mem_ms
+    # ring hand-offs + sp gradient all-reduce make time strictly larger
+    # than a pure single-device forward of the same per-device workload
+    assert sp4.time < _SP_INVALID_TIME
+    assert sp4.time > 0
+
+
+def test_sp_invalid_for_ssm_and_non_dividing_seq():
+    from repro.core.layerspec import ssm_layer
+    cm = CostModel(CLUSTER)
+    ssm = ssm_layer("ssm", 4096, 1024)
+    c = cm.layer_costs(ssm, Strategy((("sp", 4),), ckpt=False), 4.0)
+    assert c.time == _SP_INVALID_TIME          # sequential state scan
+    odd = _spec(seq=4097)                      # 4097 % 4 != 0
+    c2 = cm.layer_costs(odd, Strategy((("sp", 4),), ckpt=False), 4.0)
+    assert c2.time == _SP_INVALID_TIME
+    assert np.isfinite(c2.mem_f) and np.isfinite(c2.mem_ms)
+
+
+def test_scalar_and_vectorized_sp_tables_agree_exactly():
+    cm = CostModel(CLUSTER)
+    specs = [_spec(), _spec(seq=4097)]
+    strats = [Strategy((("sp", 4),), ckpt=False),
+              Strategy((("sp", 2), ("tp", 2)), ckpt=True),
+              Strategy((("sdp", 2), ("sp", 2)), ckpt=False),
+              Strategy((("dp", 4),), ckpt=False)]
+    tables = cm.layer_cost_tables(specs, strats, 8.0, inflight=2)
+    for i, spec in enumerate(specs):
+        for j, s in enumerate(strats):
+            c = cm.layer_costs(spec, s, 8.0, inflight=2)
+            assert tables.time_sync[i, j] == c.time, (i, j)
+            assert tables.time_nosync[i, j] == c.time_nosync, (i, j)
+            assert tables.mem_f[i, j] == c.mem_f, (i, j)
+            assert tables.mem_ms[i, j] == c.mem_ms, (i, j)
+
+
+def test_min_samples_per_device_floor():
+    spec = _spec()
+    floor = CostModel(CLUSTER, CostModelConfig(min_samples_per_device=1.0))
+    # dp8 with a single-sample micro batch would put 1/8 sample per device
+    c = floor.layer_costs(spec, Strategy((("dp", 8),), ckpt=False), 1.0)
+    assert c.time == _SP_INVALID_TIME
+    # sp8 keeps the whole sample per data lane — valid
+    c2 = floor.layer_costs(spec, Strategy((("sp", 8),), ckpt=False), 1.0)
+    assert c2.time < _SP_INVALID_TIME
+    # default config keeps the paper's unconstrained model bit-identical
+    free = CostModel(CLUSTER)
+    c3 = free.layer_costs(spec, Strategy((("dp", 8),), ckpt=False), 1.0)
+    assert c3.time < _SP_INVALID_TIME
+    # the vectorized path applies the same floor
+    t = floor.layer_cost_tables([spec], [Strategy((("dp", 8),), ckpt=False),
+                                         Strategy((("sp", 8),), ckpt=False)],
+                                1.0)
+    assert t.time_sync[0, 0] == _SP_INVALID_TIME
+    assert t.time_sync[0, 1] < _SP_INVALID_TIME
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: long-context feasibility flip
+# ---------------------------------------------------------------------------
+
+def _longctx_setup():
+    from repro.configs import get_config
+    from repro.configs.specs import layerspecs_for
+    cfg = get_config("qwen3-4b")
+    specs = layerspecs_for(cfg, 131072)
+    cluster = CLUSTERS["16x-a100-nvlink-ib100"]
+    cc = CostModelConfig(min_samples_per_device=1.0)
+    base = dict(batch_grid=(1, 2, 4), micro_candidates=2, n_bins=64)
+    return specs, cluster, cc, base
+
+
+def test_longctx_infeasible_at_sp1_feasible_with_sp():
+    specs, cluster, cc, base = _longctx_setup()
+    budget = [32 * GB]
+    opt1 = GalvatronOptimizer(specs, cluster, OptimizerConfig(**base), cc)
+    assert opt1.sweep_budgets(budget).points[0].plan is None
+
+    opt2 = GalvatronOptimizer(specs, cluster,
+                              OptimizerConfig(use_sp=True, **base), cc)
+    plan = opt2.sweep_budgets(budget).points[0].plan
+    assert plan is not None
+    assert plan.sp_degree > 1
+    assert plan.seq_len == 131072
+    assert plan.seq_len % plan.sp_degree == 0
+    # the emitted plan certifies (no errors; PLN011 included)
+    from repro.analysis import verify_plan_json
+    diags = verify_plan_json(plan.to_json())
+    assert not [d for d in diags if d.severity == "error"], diags
+
+
+def test_sp1_plans_unchanged_by_enabling_use_sp_where_sp_loses():
+    # short context, ample budget: SP never wins, and the superset search
+    # space must still emit a certifying plan
+    spec = [_spec(seq=512) for _ in range(4)]
+    base = dict(batch_grid=(8,), micro_candidates=2, n_bins=64)
+    p1 = GalvatronOptimizer(spec, CLUSTER, OptimizerConfig(**base)) \
+        .sweep_budgets([8 * GB]).points[0].plan
+    p2 = GalvatronOptimizer(spec, CLUSTER,
+                            OptimizerConfig(use_sp=True, **base)) \
+        .sweep_budgets([8 * GB]).points[0].plan
+    assert p1 is not None and p2 is not None
+    assert p2.est_throughput >= p1.est_throughput * (1 - 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# PLN011 lint
+# ---------------------------------------------------------------------------
+
+def _plan(sp_degree=1, seq_len=0, strategies=None, pp=1, n_dev=8):
+    strategies = strategies or [Strategy((("dp", 8 // pp),), ckpt=False)] * 4
+    return ParallelPlan(
+        n_devices=n_dev, pp_degree=pp, partition=[4 // pp] * pp,
+        strategies=strategies, global_batch=8, n_micro=1,
+        sp_degree=sp_degree, seq_len=seq_len)
+
+
+def _diags(plan):
+    from repro.analysis import verify_plan_json
+    return [d for d in verify_plan_json(plan.to_json())
+            if d.rule == "PLN011"]
+
+
+def test_pln011_sp_degree_must_divide_device_groups():
+    # strategies are per-stage legal (total == n_devices/pp, so PLN002 is
+    # silent) but the stamped sp_degree does not factor out of n_devices
+    strats = [Strategy((("sp", 2), ("dp", 4)),)] * 4
+    bad = _plan(sp_degree=3, seq_len=4098, strategies=strats)
+    found = _diags(bad)
+    assert any(d.severity == "error" and "divide" in d.message
+               for d in found), found
+    ok = _plan(sp_degree=4, seq_len=4096,
+               strategies=[Strategy((("sp", 4), ("dp", 2)),)] * 4)
+    assert not [d for d in _diags(ok) if d.severity == "error"]
+
+
+def test_pln011_seq_len_divisibility_and_unrecorded_warning():
+    strats = [Strategy((("sp", 4), ("dp", 2)),)] * 4
+    bad = _plan(sp_degree=4, seq_len=4098, strategies=strats)
+    assert any(d.severity == "error" and "seq_len" in d.location
+               for d in _diags(bad))
+    unrec = _plan(sp_degree=4, seq_len=0, strategies=strats)
+    found = _diags(unrec)
+    assert any(d.severity == "warning" for d in found), found
+
+
+def test_pln011_layer_sp_exceeding_stamp_is_an_error():
+    strats = [Strategy((("sp", 4), ("dp", 2)),)] * 4
+    bad = _plan(sp_degree=2, seq_len=4096, strategies=strats)
+    assert any(d.severity == "error" and "sp_degree" in d.location
+               for d in _diags(bad))
+
+
+def test_pln011_silent_on_sp1_plans():
+    assert _diags(_plan()) == []
+
+
+# ---------------------------------------------------------------------------
+# plan -> runtime bridge
+# ---------------------------------------------------------------------------
+
+def test_policy_from_plan_carries_sp_degree():
+    from repro.configs import get_config
+    from repro.runtime.plan_bridge import policy_from_plan
+    cfg = get_config("qwen3-4b")
+    strats = [Strategy((("sp", 4), ("dp", 2)),)] * cfg.n_layers
+    plan = ParallelPlan(
+        n_devices=8, pp_degree=1, partition=[cfg.n_layers],
+        strategies=strats, global_batch=8, n_micro=1,
+        sp_degree=4, seq_len=65536)
+    pol = policy_from_plan(cfg, plan)
+    assert pol.sp_degree == 4
+
+
+def test_shard_policy_from_strategy_stamps_sp():
+    from repro.runtime import ShardPolicy
+    pol = ShardPolicy.from_strategy(Strategy((("sp", 4), ("tp", 2)),))
+    assert pol.sp_degree == 4
