@@ -1,5 +1,5 @@
 """Plan verifier: static checks on ``ParallelPlan`` JSON, every format
-version (rule ids ``PLN001``–``PLN011``, catalog in ``docs/analysis.md``).
+version (rule ids ``PLN001``–``PLN012``, catalog in ``docs/analysis.md``).
 
 The search emits a plan; the runtime executes it — possibly in a
 different process, weeks later, from a file somebody hand-edited.  This
@@ -48,12 +48,15 @@ _SINGLE_CHUNK = ("gpipe", "1f1b", "zb-h1")
 def detect_format_version(d: Dict) -> int:
     """Infer the format version of a raw plan dict (see core/plan.py):
     explicit ``format_version`` stamp (v2+), else a non-default
-    ``sp_degree``/``seq_len`` implies v4, else a non-null ``serving``
-    section implies v3, else ``vpp_degree`` implies v1, else v0.  Like
-    ``serving: null``, the v4 keys at their defaults (1 / 0) carry no
-    version signal — an older file is indistinguishable from one."""
+    ``ep_degree`` implies v5, else a non-default ``sp_degree``/``seq_len``
+    implies v4, else a non-null ``serving`` section implies v3, else
+    ``vpp_degree`` implies v1, else v0.  Like ``serving: null``, the
+    v4/v5 keys at their defaults (1 / 0 / 1) carry no version signal —
+    an older file is indistinguishable from one."""
     if "format_version" in d:
         return int(d["format_version"])
+    if isinstance(d, dict) and d.get("ep_degree", 1) != 1:
+        return 5
     if isinstance(d, dict) and (d.get("sp_degree", 1) != 1
                                 or d.get("seq_len", 0)):
         return 4
@@ -135,7 +138,7 @@ def _check_version(d: Dict, loc: str, strict: bool,
             f"deprecated v{ver} plan (current is v{PLAN_FORMAT_VERSION}): "
             "missing keys are filled with the defaults that version "
             "implied (schedule='1f1b', vpp_degree=1, serving=None, "
-            "sp_degree=1)"
+            "sp_degree=1, ep_degree=1)"
             + (" — rejected under --strict" if strict else ""),
             "re-emit with the current search CLI to pin the schedule "
             "explicitly"))
@@ -391,6 +394,42 @@ def verify_plan(plan: ParallelPlan, *, location: str = "plan"
                 "differently-sharded sequences reshard tokens "
                 "(all-to-all) beside the priced hand-offs",
                 "prefer one sp degree across a stage"))
+
+    # --- PLN012: expert parallelism (ep_degree) ---------------------------
+    epd = plan.ep_degree
+    if epd > 1:
+        if n_dev % (P * spd * epd):
+            out.append(error(
+                "PLN012", f"{loc}.ep_degree",
+                f"ep_degree={epd} x sp_degree={spd} x pp_degree={P} = "
+                f"{P * spd * epd} does not divide n_devices={n_dev}: the "
+                "expert mesh axis cannot be factored out of the stage "
+                "groups (launch/mesh.py)",
+                "pp_degree * sp_degree * ep_degree must divide n_devices"))
+    if plan.strategies:
+        layer_ep = sorted({s.ep for s in plan.strategies})
+        if layer_ep[-1] > epd:
+            out.append(error(
+                "PLN012", f"{loc}.ep_degree",
+                f"per-layer strategies reach ep={layer_ep[-1]} but the "
+                f"plan stamps ep_degree={epd}: the launcher would build an "
+                "expert mesh axis too small for those layers",
+                "ep_degree must be max(layer ep degrees)"))
+        elif epd > 1 and layer_ep == [1]:
+            out.append(warning(
+                "PLN012", f"{loc}.ep_degree",
+                f"ep_degree={epd} but no layer strategy carries an ep "
+                "level: the search only emits ep on MoE-bearing stacks "
+                "(the cost model poisons ep > 1 on non-MoE layers and "
+                "when n_experts % ep != 0), so the stamp claims an "
+                "expert axis nothing uses",
+                "re-emit the plan, or drop the ep_degree stamp"))
+        elif epd > 1 and len(layer_ep) > 1:
+            out.append(info(
+                "PLN012", f"{loc}.strategies",
+                f"layers mix ep degrees {layer_ep} — the expected shape "
+                "for dense+MoE stacks (only MoE layers can shard the "
+                "expert axis; the cost model poisons ep > 1 elsewhere)"))
 
     # --- PLN008: estimator self-consistency -------------------------------
     if plan.est_stage_mem is not None and len(plan.est_stage_mem) != P:

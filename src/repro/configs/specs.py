@@ -29,7 +29,8 @@ def layerspecs_for(cfg: ModelConfig, seq_len: int, *,
                     f"layer{i}", seq_len, cfg.d_model, cfg.n_heads,
                     cfg.n_kv_heads, cfg.d_ff, cfg.n_experts, cfg.top_k,
                     d_ff_shared=cfg.shared_expert_ff,
-                    dense_residual_ff=cfg.dense_residual_ff, window=win))
+                    dense_residual_ff=cfg.dense_residual_ff, window=win,
+                    capacity_factor=cfg.capacity_factor))
             else:
                 specs.append(dense_layer(
                     f"layer{i}", seq_len, cfg.d_model, cfg.n_heads,

@@ -27,7 +27,7 @@ import numpy as np
 
 from .hardware import ClusterSpec
 from .layerspec import LayerSpec
-from .strategy import DP, SDP, SP, TP, Strategy
+from .strategy import DP, EP, SDP, SP, TP, Strategy
 
 # which profiled collective prices which paradigm's traffic
 _PARADIGM_COLLECTIVE = {
@@ -35,6 +35,9 @@ _PARADIGM_COLLECTIVE = {
     DP: "all_reduce",        # gradient all-reduce
     SDP: "all_gather",       # param all-gather (reduce-scatter priced apart)
     SP: "ppermute",          # ring-attention K/V panel hand-off
+    EP: "all_to_all",        # MoE token dispatch/combine (no profile kind is
+                             # recorded for it, so collective_coeffs always
+                             # returns the analytic (0.0, bandwidth) pair)
 }
 
 # finite poison for (layer, strategy) pairs SP cannot execute (sequence not
@@ -54,6 +57,16 @@ def _sp_applicable(spec: LayerSpec, sp: int) -> bool:
         return True
     return (spec.seq_len > 0 and spec.seq_len % sp == 0
             and spec.kind != "ssm")
+
+
+def _ep_applicable(spec: LayerSpec, ep: int) -> bool:
+    """Can this layer run expert-sharded at degree ``ep``?
+
+    Only MoE layers carry experts, and the expert axis must divide the
+    expert count evenly (ragged expert placement is not modeled)."""
+    if ep <= 1:
+        return True
+    return spec.n_experts > 1 and spec.n_experts % ep == 0
 
 
 # --------------------------------------------------------------------------
@@ -187,6 +200,13 @@ class CostModelConfig:
     # regime, docs/architecture.md §SP).  0.0 (default) keeps the
     # unconstrained paper model, bit-identical to prior searches.
     min_samples_per_device: float = 0.0
+    # expert-imbalance slowdown fed into the workload-balance objective:
+    # the hot EP rank is modeled as carrying (1 + ep_imbalance * (ep-1)/ep)x
+    # its fair token share (routing skew grows with the expert-group size),
+    # inflating both the expert compute and the all-to-all payload of
+    # ep > 1 strategies.  0.0 (default) models perfectly balanced routing —
+    # bit-identical to searches that never price EP.
+    ep_imbalance: float = 0.0
 
 
 class CostModel:
@@ -273,13 +293,21 @@ class CostModel:
         cfg = self.cfg
         dev = self.cluster.device
         dp, sdp, tp, sp = strat.dp, strat.sdp, strat.tp, strat.sp
+        ep = strat.ep
         data_deg = dp * sdp
         b_dev = micro_batch_size / data_deg
+        # hot-rank routing skew (1.0 when ep == 1 or imbalance not modeled)
+        ep_imb = 1.0 + cfg.ep_imbalance * self._ring_factor(ep)
 
         # ---- memory: model states -------------------------------------
         p_tp = spec.param_count * spec.tp_frac
         p_rep = spec.param_count * (1.0 - spec.tp_frac)
         params_dev = p_tp / tp + p_rep          # after TP sharding
+        # EP shards the expert slab (a subset of the TP-shardable params)
+        # ep ways; everything else is replicated across the expert group
+        p_exp_dev = spec.param_count * spec.expert_param_frac / tp
+        if ep > 1:
+            params_dev = params_dev - p_exp_dev + p_exp_dev / ep
         ms = cfg.bytes_per_param_states * params_dev / sdp
 
         # ---- memory: activations ---------------------------------------
@@ -287,6 +315,14 @@ class CostModel:
         # tokens per device — the workload-balance lever long context needs
         bnd_dev = spec.bnd_bytes_per_sample * b_dev / sp
         int_dev = spec.int_bytes_per_sample * b_dev / sp / tp
+        if ep > 1:
+            # the expert group also shards tokens (DP-like for the dense
+            # part); routed-expert activations are capacity-padded
+            int_exp = (spec.int_bytes_per_sample * spec.expert_act_frac
+                       * b_dev / sp / tp)
+            bnd_dev = bnd_dev / ep
+            int_dev = ((int_dev - int_exp) / ep
+                       + int_exp * spec.capacity_factor / ep)
         if tp > 1:
             int_dev += cfg.tp_act_replicated_bnd * bnd_dev
         if strat.ckpt:
@@ -303,6 +339,13 @@ class CostModel:
         else:
             flops_dev = spec.flops_per_sample * b_dev / sp / tp
             comp_fwd = flops_dev / (dev.peak_flops * cfg.mfu)
+        if ep > 1:
+            # expert group shards tokens; the routed-expert share pays the
+            # capacity padding and any modeled hot-rank imbalance
+            ep_scale = ((1.0 - spec.expert_flops_frac)
+                        + spec.expert_flops_frac * spec.capacity_factor
+                        * ep_imb)
+            comp_fwd = comp_fwd * ep_scale / ep
         comp_bwd = 2.0 * comp_fwd
         recompute = comp_fwd if strat.ckpt else 0.0
 
@@ -315,7 +358,7 @@ class CostModel:
         tp_time_fwd = tp_time_bwd = 0.0
         if tp > 1:
             lat, bw = self._level_coeffs(strat, TP)
-            msg = spec.bnd_bytes_per_sample * b_dev / sp
+            msg = bnd_dev        # per-device hidden states (sp- and ep-sharded)
             ar = lat + 2.0 * self._ring_factor(tp) * msg / bw
             tp_time_fwd = 2.0 * ar
             tp_time_bwd = 2.0 * ar
@@ -361,20 +404,38 @@ class CostModel:
             gbytes = cfg.bytes_per_param * params_dev
             sp_ar = lat_sar + 2.0 * self._ring_factor(sp) * gbytes / bw_sar
 
-        # ---- assemble (overlap model, §V) -------------------------------
-        # forward: TP all-reduce blocks; SDP gather and the SP ring
-        # hand-off overlap with compute (the permute is issued before the
-        # round's kernel — see kernels/ring_attention.py)
-        fwd = self._overlap(comp_fwd, sdp_ag_fwd + sp_ring_fwd) + tp_time_fwd
-        # recompute forward (CKPT) repeats TP collectives + the SP ring too
-        re_fwd = (self._overlap(recompute, sp_ring_fwd) + tp_time_fwd) if strat.ckpt else 0.0
-        # backward: DP/SDP gradient comm overlaps with compute
-        bwd_nosync = self._overlap(comp_bwd, sdp_ag_bwd + sp_ring_bwd) + tp_time_bwd
-        bwd_sync = self._overlap(
-            comp_bwd,
-            sdp_ag_bwd + sp_ring_bwd + sdp_rs + dp_ar + sp_ar) + tp_time_bwd
+        # EP: all-to-all token dispatch + combine across the expert group
+        # (fwd, and again for the gradients on the backward), plus a
+        # DP-like gradient all-reduce of the replicated (non-expert)
+        # params with the last micro-batch.
+        ep_a2a = ep_ar = 0.0
+        if ep > 1:
+            lat_ep, bw_ep = self._level_coeffs(strat, EP)
+            msg_ep = (spec.bnd_bytes_per_sample * b_dev / sp / ep
+                      * spec.top_k * spec.capacity_factor * ep_imb)
+            ep_a2a = 2.0 * (lat_ep + self._ring_factor(ep) * msg_ep / bw_ep)
+            lat_ear, bw_ear = self._level_coeffs(strat, EP, "all_reduce")
+            g_rep = cfg.bytes_per_param * (params_dev - p_exp_dev / ep)
+            ep_ar = lat_ear + 2.0 * self._ring_factor(ep) * g_rep / bw_ear
 
-        if not _sp_applicable(spec, sp) or (
+        # ---- assemble (overlap model, §V) -------------------------------
+        # forward: TP all-reduce and the EP all-to-all block; SDP gather
+        # and the SP ring hand-off overlap with compute (the permute is
+        # issued before the round's kernel — see kernels/ring_attention.py)
+        fwd = (self._overlap(comp_fwd, sdp_ag_fwd + sp_ring_fwd)
+               + tp_time_fwd + ep_a2a)
+        # recompute forward (CKPT) repeats TP collectives + the SP ring too
+        re_fwd = (self._overlap(recompute, sp_ring_fwd)
+                  + tp_time_fwd + ep_a2a) if strat.ckpt else 0.0
+        # backward: DP/SDP gradient comm overlaps with compute
+        bwd_nosync = (self._overlap(comp_bwd, sdp_ag_bwd + sp_ring_bwd)
+                      + tp_time_bwd + ep_a2a)
+        bwd_sync = (self._overlap(
+            comp_bwd,
+            sdp_ag_bwd + sp_ring_bwd + sdp_rs + dp_ar + sp_ar + ep_ar)
+            + tp_time_bwd + ep_a2a)
+
+        if not _sp_applicable(spec, sp) or not _ep_applicable(spec, ep) or (
                 cfg.min_samples_per_device > 0.0
                 and b_dev < cfg.min_samples_per_device):
             # memory stays finite (the DP's bin weights must stay sane);
@@ -420,6 +481,7 @@ class CostModel:
         sdp = np.array([s.sdp for s in strategies], float)
         tp = np.array([s.tp for s in strategies], float)
         spd = np.array([s.sp for s in strategies], float)
+        epd = np.array([s.ep for s in strategies], float)
         total = np.array([s.total for s in strategies], float)
         ckpt = np.array([s.ckpt for s in strategies], bool)
         co = lambda pairs, i: np.array([p[i] for p in pairs])
@@ -429,11 +491,14 @@ class CostModel:
         c_dp = [self._level_coeffs(s, DP) for s in strategies]
         c_sp = [self._level_coeffs(s, SP) for s in strategies]
         c_sar = [self._level_coeffs(s, SP, "all_reduce") for s in strategies]
+        c_ep = [self._level_coeffs(s, EP) for s in strategies]
+        c_ear = [self._level_coeffs(s, EP, "all_reduce") for s in strategies]
         c_tot = [self._group_coeffs("all_gather", int(s.total))
                  for s in strategies]
         bw_tp, bw_ag, bw_rs = co(c_tp, 1), co(c_ag, 1), co(c_rs, 1)
         bw_dp, bw_tot = co(c_dp, 1), co(c_tot, 1)
         bw_sp, bw_sar = co(c_sp, 1), co(c_sar, 1)
+        bw_ep, bw_ear = co(c_ep, 1), co(c_ear, 1)
         # latency enters only where the paradigm is actually active — the
         # scalar path guards each comm term behind ``if deg > 1``
         lat_tp = np.where(tp > 1, co(c_tp, 0), 0.0)
@@ -442,12 +507,17 @@ class CostModel:
         lat_dp = np.where(dp > 1, co(c_dp, 0), 0.0)
         lat_sp = np.where(spd > 1, co(c_sp, 0), 0.0)
         lat_sar = np.where(spd > 1, co(c_sar, 0), 0.0)
+        lat_ep = np.where(epd > 1, co(c_ep, 0), 0.0)
+        lat_ear = np.where(epd > 1, co(c_ear, 0), 0.0)
         lat_tot = np.where(total > 1, co(c_tot, 0), 0.0)
         ring_tp = np.where(tp > 1, (tp - 1) / tp, 0.0)
         ring_sdp = np.where(sdp > 1, (sdp - 1) / sdp, 0.0)
         ring_dp = np.where(dp > 1, (dp - 1) / dp, 0.0)
         ring_spd = np.where(spd > 1, (spd - 1) / spd, 0.0)
+        ring_epd = np.where(epd > 1, (epd - 1) / epd, 0.0)
         ring_tot = np.where(total > 1, (total - 1) / total, 0.0)
+        # hot-rank routing skew, exactly the scalar path's ``ep_imb``
+        ep_imb = 1.0 + cfg.ep_imbalance * ring_epd
 
         # ---- per-layer vectors (L, 1) ---------------------------------
         col = lambda v: np.asarray(v, float).reshape(L, 1)
@@ -458,6 +528,11 @@ class CostModel:
         flops = col([sp.flops_per_sample for sp in specs])
         top_k = col([sp.top_k for sp in specs])
         moe = np.array([sp.n_experts > 1 for sp in specs]).reshape(L, 1)
+        n_exp = col([sp.n_experts for sp in specs])
+        epf = col([sp.expert_param_frac for sp in specs])
+        eaf = col([sp.expert_act_frac for sp in specs])
+        eff = col([sp.expert_flops_frac for sp in specs])
+        cfac = col([sp.capacity_factor for sp in specs])
         kvb = col([sp.kv_bytes_per_sample for sp in specs])
         seq_l = col([sp.seq_len for sp in specs])
         sp_kind_ok = np.array([sp.kind != "ssm"
@@ -468,11 +543,20 @@ class CostModel:
         # ---- memory: model states -------------------------------------
         b_dev = micro_batch_size / (dp * sdp)             # (S,)
         params_dev = param_count * tp_frac / tp + param_count * (1.0 - tp_frac)
+        p_exp_dev = param_count * epf / tp
+        params_dev = np.where(epd > 1,
+                              params_dev - p_exp_dev + p_exp_dev / epd,
+                              params_dev)
         ms = cfg.bytes_per_param_states * params_dev / sdp
 
         # ---- memory: activations --------------------------------------
         bnd_dev = bnd * b_dev / spd
         int_dev = intb * b_dev / spd / tp
+        int_exp = intb * eaf * b_dev / spd / tp
+        bnd_dev = np.where(epd > 1, bnd_dev / epd, bnd_dev)
+        int_dev = np.where(epd > 1,
+                           (int_dev - int_exp) / epd + int_exp * cfac / epd,
+                           int_dev)
         int_dev = np.where(tp > 1,
                            int_dev + cfg.tp_act_replicated_bnd * bnd_dev,
                            int_dev)
@@ -483,6 +567,8 @@ class CostModel:
         comp_fwd = np.where(np.isnan(profiled),
                             (flops * b_dev / spd / tp) / (dev.peak_flops * cfg.mfu),
                             np.nan_to_num(profiled) * b_dev / spd / tp)
+        ep_scale = (1.0 - eff) + eff * cfac * ep_imb
+        comp_fwd = np.where(epd > 1, comp_fwd * ep_scale / epd, comp_fwd)
         comp_bwd = 2.0 * comp_fwd
         recompute = np.where(ckpt, comp_fwd, 0.0)
 
@@ -511,6 +597,15 @@ class CostModel:
         sp_ar = np.where(spd > 1,
                          lat_sar + 2.0 * ring_spd * pbytes / bw_sar, 0.0)
 
+        # EP: all-to-all dispatch + combine, plus the replicated-param
+        # gradient all-reduce — mirrors the scalar path's ``if ep > 1``
+        msg_ep = bnd * b_dev / spd / epd * top_k * cfac * ep_imb
+        ep_a2a = np.where(epd > 1,
+                          2.0 * (lat_ep + ring_epd * msg_ep / bw_ep), 0.0)
+        g_rep = cfg.bytes_per_param * (params_dev - p_exp_dev / epd)
+        ep_ar = np.where(epd > 1,
+                         lat_ear + 2.0 * ring_epd * g_rep / bw_ear, 0.0)
+
         # ---- assemble (overlap model, §V) ------------------------------
         sd = dev.overlap_slowdown
 
@@ -519,15 +614,21 @@ class CostModel:
                             np.where(comm <= 0.0, comp,
                                      np.maximum(comp * sd, comm * sd)))
 
-        fwd = overlap(comp_fwd, sdp_ag + sp_ring_fwd) + tp_time
-        re_fwd = np.where(ckpt, overlap(recompute, sp_ring_fwd) + tp_time, 0.0)
-        bwd_nosync = overlap(comp_bwd, sdp_ag + sp_ring_bwd) + tp_time
+        fwd = overlap(comp_fwd, sdp_ag + sp_ring_fwd) + tp_time + ep_a2a
+        re_fwd = np.where(ckpt,
+                          overlap(recompute, sp_ring_fwd) + tp_time + ep_a2a,
+                          0.0)
+        bwd_nosync = overlap(comp_bwd, sdp_ag + sp_ring_bwd) + tp_time + ep_a2a
         bwd_sync = overlap(
-            comp_bwd, sdp_ag + sp_ring_bwd + sdp_rs + dp_ar + sp_ar) + tp_time
+            comp_bwd,
+            sdp_ag + sp_ring_bwd + sdp_rs + dp_ar + sp_ar + ep_ar
+        ) + tp_time + ep_a2a
 
-        # pairs SP cannot execute get the scalar path's poison time
+        # pairs SP/EP cannot execute get the scalar path's poison time
         sp_bad = (spd > 1) & ~((seq_l > 0)
                                & (np.mod(seq_l, spd) == 0) & sp_kind_ok)
+        ep_bad = (epd > 1) & ~((n_exp > 1) & (np.mod(n_exp, epd) == 0))
+        sp_bad = sp_bad | ep_bad
         if cfg.min_samples_per_device > 0.0:
             # physical floor: DP/SDP cannot split one sample (see config)
             sp_bad = sp_bad | (b_dev < cfg.min_samples_per_device)

@@ -51,6 +51,7 @@ def construct_search_space(
     max_pp: int | None = None,
     max_tp: int | None = None,
     max_sp: int | None = None,
+    max_ep: int | None = None,
 ) -> SearchSpace:
     per_pp: Dict[int, List[Strategy]] = {}
     for pp in pp_degree_candidates(n_devices, max_pp):
@@ -65,5 +66,7 @@ def construct_search_space(
             strategies = [s for s in strategies if s.tp <= max_tp]
         if max_sp is not None:
             strategies = [s for s in strategies if s.sp <= max_sp]
+        if max_ep is not None:
+            strategies = [s for s in strategies if s.ep <= max_ep]
         per_pp[pp] = strategies
     return SearchSpace(n_devices=n_devices, per_pp=per_pp)

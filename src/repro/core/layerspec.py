@@ -40,6 +40,13 @@ class LayerSpec:
     n_experts: int = 0
     top_k: int = 0
     expert_param_frac: float = 0.0   # fraction of params living in experts
+    # fraction of intermediate activation bytes / forward FLOPs spent in the
+    # routed experts — the parts EP shards across the expert group
+    expert_act_frac: float = 0.0
+    expert_flops_frac: float = 0.0
+    # router capacity factor: each expert processes up to
+    # ceil(T * top_k / E * capacity_factor) tokens (padding overhead EP pays)
+    capacity_factor: float = 1.0
 
     def active_param_count(self) -> float:
         """Parameters touched per token (MoE: only top-k experts)."""
@@ -127,7 +134,8 @@ def moe_layer(name: str, seq: int, d: int, n_heads: int, n_kv: int,
               d_ff_expert: int, n_experts: int, top_k: int, *,
               d_ff_shared: int = 0, dense_residual_ff: int = 0,
               causal: bool = True, store_attn_matrix: bool = False,
-              window: Optional[int] = None) -> LayerSpec:
+              window: Optional[int] = None,
+              capacity_factor: float = 1.0) -> LayerSpec:
     """Transformer block whose MLP is a top-k routed mixture of experts.
 
     ``d_ff_shared`` adds always-on shared experts (Kimi-K2 style);
@@ -145,7 +153,8 @@ def moe_layer(name: str, seq: int, d: int, n_heads: int, n_kv: int,
 
     flops = _attn_flops(seq, d, n_heads, n_kv, causal, window)
     flops += 2 * seq * d * n_experts                       # router
-    flops += _mlp_flops(seq, d, d_ff_expert, True) * top_k  # routed experts
+    f_expert = _mlp_flops(seq, d, d_ff_expert, True) * top_k  # routed experts
+    flops += f_expert
     if d_ff_shared:
         flops += _mlp_flops(seq, d, d_ff_shared, True)
     if dense_residual_ff:
@@ -153,12 +162,14 @@ def moe_layer(name: str, seq: int, d: int, n_heads: int, n_kv: int,
 
     bnd = seq * d * BYTES_ACT
     inter = _attn_act(seq, d, n_heads, n_kv, store_attn_matrix, window)
-    inter += _mlp_act(seq, d, d_ff_expert, True) * top_k
+    a_expert = _mlp_act(seq, d, d_ff_expert, True) * top_k
+    inter += a_expert
     if d_ff_shared:
         inter += _mlp_act(seq, d, d_ff_shared, True)
     if dense_residual_ff:
         inter += _mlp_act(seq, d, dense_residual_ff, True)
     inter += seq * n_experts * BYTES_ACT                    # router logits
+    a_frac = a_expert / inter      # ratio unaffected by ACT_CALIBRATION
     inter *= ACT_CALIBRATION
     return LayerSpec(name=name, kind="moe", param_count=params,
                      flops_per_sample=flops, bnd_bytes_per_sample=bnd,
@@ -166,6 +177,9 @@ def moe_layer(name: str, seq: int, d: int, n_heads: int, n_kv: int,
                      tp_frac=(p_attn + p_expert + p_shared + p_dense) / params,
                      n_experts=n_experts, top_k=top_k,
                      expert_param_frac=p_expert / params,
+                     expert_act_frac=a_frac,
+                     expert_flops_frac=f_expert / flops,
+                     capacity_factor=capacity_factor,
                      kv_bytes_per_sample=2 * seq * kv_dim * BYTES_ACT)
 
 
@@ -263,6 +277,13 @@ def merge(name: str, *specs: LayerSpec) -> LayerSpec:
         top_k=max(s.top_k for s in specs),
         expert_param_frac=(sum(s.expert_param_frac * s.param_count for s in specs)
                            / max(1.0, sum(s.param_count for s in specs))),
+        expert_act_frac=(sum(s.expert_act_frac * s.int_bytes_per_sample
+                             for s in specs)
+                         / max(1.0, sum(s.int_bytes_per_sample for s in specs))),
+        expert_flops_frac=(sum(s.expert_flops_frac * s.flops_per_sample
+                               for s in specs)
+                           / max(1.0, sum(s.flops_per_sample for s in specs))),
+        capacity_factor=max(s.capacity_factor for s in specs),
     )
 
 

@@ -40,7 +40,7 @@ from .pipeline_balance import (PartitionEval, adjust_partition,
                                time_balanced_partition,
                                validate_adjustment)
 from .plan import ParallelPlan
-from .strategy import PARADIGMS, SP, Strategy, strategy_set_id
+from .strategy import EP, PARADIGMS, SP, Strategy, strategy_set_id
 
 INF = float("inf")
 
@@ -91,6 +91,11 @@ class OptimizerConfig:
     # SP branch (the paper-count leaf sets stay untouched by default)
     use_sp: bool = False
     max_sp: Optional[int] = None
+    # expert parallelism (sharded MoE experts + all-to-all dispatch) as a
+    # fifth searched paradigm; opt-in exactly like ``use_sp`` — appends
+    # "ep" to ``paradigms``, so default searches stay bit-identical
+    use_ep: bool = False
+    max_ep: Optional[int] = None
     bi_objective: bool = True                  # BMW partition refinement
     schedule: str = "1f1b"          # or "gpipe" / "1f1b-interleaved" / "zb-h1"
     # pipeline-schedule search axis: candidate schedule names swept per
@@ -194,6 +199,8 @@ class GalvatronOptimizer:
         paradigms = tuple(self.cfg.paradigms)
         if self.cfg.use_sp and SP not in paradigms:
             paradigms = paradigms + (SP,)
+        if self.cfg.use_ep and EP not in paradigms:
+            paradigms = paradigms + (EP,)
         self.search_space = construct_search_space(
             cluster.n_devices,
             paradigms=paradigms,
@@ -201,6 +208,7 @@ class GalvatronOptimizer:
             max_pp=(1 if not self.cfg.use_pp else self.cfg.max_pp),
             max_tp=self.cfg.max_tp,
             max_sp=self.cfg.max_sp,
+            max_ep=self.cfg.max_ep,
         )
         self.stats: Dict[str, float] = {
             "stage_searches": 0,        # dp_search_stage requests
@@ -719,6 +727,8 @@ class GalvatronOptimizer:
                                 seq_len=max((sp.seq_len
                                              for sp in self.specs),
                                             default=0),
+                                ep_degree=max((s.ep for s in strats),
+                                              default=1),
                                 est_iter_time=t, est_throughput=B / t,
                                 est_stage_mem=ev.stage_mems,
                                 alpha_t=a_t, alpha_m=a_m)

@@ -16,11 +16,15 @@ JSON format versioning (full schema + compat table: docs/plan-format.md):
     sequence length the plan was searched for, default 0 = unrecorded;
     lint rule PLN011 checks ``seq_len % sp_degree == 0`` when both are
     present).
+  * v5 (PR 10) — optional ``ep_degree`` (expert-parallel degree: MoE
+    experts sharded over an expert axis with all-to-all dispatch/combine,
+    default 1 = experts replicated; lint rule PLN012 checks the device
+    factorization and that per-layer ``ep`` degrees stay under the stamp).
 
 ``from_json`` reads every older version (missing keys default to the
 value that version implied: ``schedule="1f1b"``, ``vpp_degree=1``,
-``serving=None``, ``sp_degree=1``, ``seq_len=0``); ``to_json`` always
-writes the current version.
+``serving=None``, ``sp_degree=1``, ``seq_len=0``, ``ep_degree=1``);
+``to_json`` always writes the current version.
 """
 from __future__ import annotations
 
@@ -31,7 +35,7 @@ from typing import Dict, List, Optional
 from .strategy import Strategy
 
 #: version stamp written by :meth:`ParallelPlan.to_json` (see module doc)
-PLAN_FORMAT_VERSION = 4
+PLAN_FORMAT_VERSION = 5
 
 
 @dataclasses.dataclass
@@ -122,6 +126,8 @@ class ParallelPlan:
                                          # degree; 1 = no sequence sharding
     seq_len: int = 0                     # searched sequence length (tokens);
                                          # 0 = unrecorded (pre-v4 plans)
+    ep_degree: int = 1                   # expert-parallel degree (sharded
+                                         # MoE experts); 1 = replicated
 
     # estimator outputs (filled by the search)
     est_iter_time: float = 0.0
@@ -152,6 +158,9 @@ class ParallelPlan:
         if self.sp_degree < 1:
             raise ValueError(
                 f"sp_degree must be >= 1, got {self.sp_degree}")
+        if self.ep_degree < 1:
+            raise ValueError(
+                f"ep_degree must be >= 1, got {self.ep_degree}")
 
     @property
     def micro_batch_size(self) -> int:
@@ -192,6 +201,7 @@ class ParallelPlan:
             "vpp_degree": self.vpp_degree,
             "sp_degree": self.sp_degree,
             "seq_len": self.seq_len,
+            "ep_degree": self.ep_degree,
             "est_iter_time": self.est_iter_time,
             "est_throughput": self.est_throughput,
             "est_stage_mem": self.est_stage_mem,
@@ -266,6 +276,8 @@ class ParallelPlan:
             # pre-v4 plan JSON predates sequence parallelism
             sp_degree=d.get("sp_degree", 1),
             seq_len=d.get("seq_len", 0),
+            # pre-v5 plan JSON predates expert parallelism
+            ep_degree=d.get("ep_degree", 1),
             est_iter_time=d.get("est_iter_time", 0.0),
             est_throughput=d.get("est_throughput", 0.0),
             est_stage_mem=d.get("est_stage_mem"),

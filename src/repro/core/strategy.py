@@ -9,9 +9,10 @@ the innermost (fastest) links.
 
 Paradigms: ``dp`` (data parallel), ``sdp`` (sharded data parallel / ZeRO-3),
 ``tp`` (tensor parallel), ``sp`` (sequence parallel — ring attention over a
-sequence-sharded axis; opt-in, see ``SP_PARADIGMS``).  PP is handled one
-level up (it partitions the model into stages before per-layer search —
-Takeaway #1).
+sequence-sharded axis; opt-in, see ``SP_PARADIGMS``), ``ep`` (expert
+parallel — MoE experts sharded over an expert axis with all-to-all
+dispatch/combine; opt-in, see ``EP_PARADIGMS``).  PP is handled one level up
+(it partitions the model into stages before per-layer search — Takeaway #1).
 """
 from __future__ import annotations
 
@@ -28,6 +29,11 @@ PARADIGMS = (DP, SDP, TP)
 # paper's 8-device leaf counts that tests pin are defined over DP/SDP/TP);
 # ``OptimizerConfig(use_sp=True)`` passes this tuple through instead.
 SP_PARADIGMS = (DP, SDP, TP, SP)
+EP = "ep"
+# EP widens the tree further with an expert-parallel branch for MoE layers.
+# Also opt-in: ``OptimizerConfig(use_ep=True)`` appends EP to whatever
+# paradigm tuple is otherwise in effect (so EP composes with use_sp).
+EP_PARADIGMS = (DP, SDP, TP, SP, EP)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -60,6 +66,10 @@ class Strategy:
     @property
     def sp(self) -> int:
         return self.degree(SP)
+
+    @property
+    def ep(self) -> int:
+        return self.degree(EP)
 
     @property
     def total(self) -> int:

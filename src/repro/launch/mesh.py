@@ -54,6 +54,20 @@ def make_ring_mesh(n_seq: int = 0, n_data: int = 1):
     return _mk((n_data, n_seq), ("data", "seq"))
 
 
+def make_expert_mesh(n_ep: int = 0, n_data: int = 1):
+    """DP x EP mesh for expert parallelism.
+
+    The ``expert`` axis carries the searched ``plan.ep_degree`` (format
+    v5): expert weights shard over it (runtime/sharding.py), the batch
+    dim co-shards over data x expert, and MoE dispatch runs the
+    all-to-all path (models/moe.py::_moe_ep).  ``n_ep=0`` takes every
+    device left after the ``data`` axis.
+    """
+    n = len(jax.devices())
+    n_ep = n_ep or n // n_data
+    return _mk((n_data, n_ep), ("data", "expert"))
+
+
 def make_local_mesh(model: int = 1):
     """Whatever this host offers (examples, smoke tests)."""
     n = len(jax.devices())

@@ -160,6 +160,10 @@ def build_optimizer(specs, cluster, args) -> GalvatronOptimizer:
         ocfg.use_sp = True
     if getattr(args, "max_sp", 0):
         ocfg.max_sp = args.max_sp
+    if getattr(args, "ep", False):
+        ocfg.use_ep = True
+    if getattr(args, "max_ep", 0):
+        ocfg.max_ep = args.max_ep
     cost_cfg = None
     if getattr(args, "min_samples_per_device", 0.0):
         from repro.core.cost_model import CostModelConfig
@@ -259,6 +263,14 @@ def main(argv=None) -> int:
     ap.add_argument("--max-sp", type=int, default=0,
                     help="cap the searched sequence-parallel degree "
                          "(0 = no cap; implies nothing without --sp)")
+    ap.add_argument("--ep", action="store_true",
+                    help="add expert parallelism to the searched paradigms "
+                         "(plan format v5 ep_degree; MoE expert weights "
+                         "shard over an expert axis with all-to-all "
+                         "dispatch/combine — docs/architecture.md §EP)")
+    ap.add_argument("--max-ep", type=int, default=0,
+                    help="cap the searched expert-parallel degree "
+                         "(0 = no cap; implies nothing without --ep)")
     ap.add_argument("--min-samples-per-device", type=float, default=0.0,
                     help="physical per-device batch floor: reject "
                          "strategies whose DP/SDP span leaves fewer "

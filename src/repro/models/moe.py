@@ -255,6 +255,122 @@ def _moe_shmap(p, x: jax.Array, cfg: ModelConfig, mesh,
     return out, aux
 
 
+def _shard_map_compat(mesh):
+    """Version-compat ``shard_map`` binder (same dance as ``_moe_shmap``)."""
+    try:
+        from jax import shard_map as _sm
+
+        def _shard_map(f, in_specs, out_specs):
+            return _sm(f, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    except (ImportError, TypeError):  # pragma: no cover
+        from jax.experimental.shard_map import shard_map as _sm_old
+
+        def _shard_map(f, in_specs, out_specs):
+            return _sm_old(f, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, check_rep=False)
+    return _shard_map
+
+
+def _moe_ep(p, x: jax.Array, cfg: ModelConfig, mesh,
+            bt_axes) -> Tuple[jax.Array, jax.Array]:
+    """Expert parallelism over the searched ``"expert"`` mesh axis — the
+    runtime for a plan's ``ep_degree`` (plan format v5).
+
+    Each expert rank owns ``E / ep`` experts (weights sharded on the mesh)
+    and a batch shard of token groups.  Tokens route locally against the
+    replicated router, the per-group dispatch buffer is built locally in
+    global expert order, and one **all-to-all** per direction moves each
+    expert's capacity slab to its owner (dispatch) and the expert outputs
+    back (combine) — the collective the cost model prices for EP.  Group
+    semantics (per-group capacity, stable-sort ranking, drop order) are
+    identical to the single-device sort path, so outputs are
+    token-identical to ``dispatch="sort"`` (tests/test_moe.py certifies
+    this on an 8-fake-device mesh).
+    """
+    import jax.experimental.shard_map  # noqa: F401  (older-alias safety)
+    from jax.sharding import PartitionSpec as P
+
+    G, T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(T, cfg)
+    n_ep = mesh.shape["expert"]
+    E_loc = E // n_ep
+    bt = tuple(a for a in (bt_axes or ()) if a != "expert")
+    aux_axes = bt + ("expert",)
+
+    def local(p_loc, x_loc):
+        g_loc = x_loc.shape[0]
+        # route per group (aux is a per-group mean, like the single-device
+        # path: joint routing over g_loc groups would skew the balance loss)
+        topv, topi, aux = jax.vmap(
+            lambda g: _route(p_loc, g, cfg))(x_loc)       # (g_loc, T, k)
+        aux = jax.lax.pmean(aux.mean(), aux_axes)
+
+        # per-group dispatch in GLOBAL expert order (same arithmetic as
+        # _moe_grouped: stable sort, searchsorted starts, capacity drop)
+        flat_e = topi.reshape(g_loc, T * k)
+        flat_w = topv.reshape(g_loc, T * k)
+        flat_t = jnp.broadcast_to(jnp.repeat(jnp.arange(T), k)[None],
+                                  (g_loc, T * k))
+        order = jnp.argsort(flat_e, axis=1, stable=True)
+        se = jnp.take_along_axis(flat_e, order, 1)
+        st = jnp.take_along_axis(flat_t, order, 1)
+        sw = jnp.take_along_axis(flat_w, order, 1)
+        starts = jax.vmap(
+            lambda row: jnp.searchsorted(row, jnp.arange(E)))(se)
+        rank = jnp.arange(T * k)[None] - jnp.take_along_axis(starts, se, 1)
+        keep = rank < C
+        slot = jnp.where(keep, se * C + rank, 0)
+        gathered = jnp.take_along_axis(x_loc, st[..., None], 1)
+        vals = jnp.where(keep[..., None], gathered, 0.0)
+        buf = jnp.zeros((g_loc, E * C, d), x_loc.dtype)
+        buf = buf.at[jnp.arange(g_loc)[:, None], slot].add(vals)
+
+        # dispatch: slab for expert block q travels to rank q; combine
+        # reverses the route.  tiled all-to-all keeps ranks' slabs in
+        # global rank order, so the reshape below restores e*C + r slots.
+        recv = jax.lax.all_to_all(buf, "expert", split_axis=1,
+                                  concat_axis=0, tiled=True)
+        y = jax.vmap(
+            lambda h: _experts(p_loc, h.reshape(E_loc, C, d)))(recv)
+        y = y.reshape(n_ep * g_loc, E_loc * C, d)
+        y = jax.lax.all_to_all(y, "expert", split_axis=0,
+                               concat_axis=1, tiled=True)  # (g_loc, E*C, d)
+
+        picked = jnp.take_along_axis(y, slot[..., None], 1)
+        contrib = jnp.where(keep[..., None], picked,
+                            0.0) * sw[..., None].astype(x_loc.dtype)
+        out = jnp.zeros((g_loc, T, d), x_loc.dtype).at[
+            jnp.arange(g_loc)[:, None], st].add(contrib)
+        return out, aux
+
+    x_spec = P(bt + ("expert",), None, None)
+    routed = {key: p[key] for key in ("router", "w_gate", "w_up", "w_down")}
+    routed_specs = {key: (P("expert", None, None)
+                          if key != "router" else P()) for key in routed}
+    out, aux = _shard_map_compat(mesh)(local, (routed_specs, x_spec),
+                                       (x_spec, P()))(routed, x)
+    return out, aux
+
+
+def expert_axis_usable(cfg: ModelConfig, mesh, batch: int,
+                       bt_axes) -> bool:
+    """Can ``_moe_ep`` run: an ``"expert"`` mesh axis of size > 1 exists,
+    it divides the expert count, and the batch shards evenly over the
+    data x expert axes."""
+    if mesh is None or "expert" not in mesh.axis_names:
+        return False
+    n_ep = mesh.shape["expert"]
+    if n_ep <= 1 or cfg.n_experts % n_ep:
+        return False
+    span = n_ep
+    for a in (bt_axes or ()):
+        if a != "expert":
+            span *= mesh.shape[a]
+    return batch % span == 0
+
+
 def moe_ffn(p, x: jax.Array, cfg: ModelConfig, *,
             dispatch: str = "sort") -> Tuple[jax.Array, jax.Array]:
     """x (B, S, d) -> (out, aux_loss).
@@ -263,8 +379,24 @@ def moe_ffn(p, x: jax.Array, cfg: ModelConfig, *,
     compete for expert capacity within their own group, so the dispatch
     buffers carry a leading batch dimension that shards over the data mesh
     axis while the expert dimension shards over the model axis.
+
+    When the ambient mesh carries an ``"expert"`` axis (a plan with
+    ``ep_degree > 1``, see launch/mesh.py), the sort dispatch executes
+    expert-parallel via :func:`_moe_ep` — sharded expert weights plus
+    all-to-all dispatch/combine — regardless of ``cfg.moe_dispatch``.
     """
     B, S, d = x.shape
+    from .flags import current_batch_axes, current_mesh
+    ep_mesh = current_mesh()
+    ep_bt = current_batch_axes()
+    if (dispatch in ("sort", "grouped", "shmap")
+            and expert_axis_usable(cfg, ep_mesh, B, ep_bt)):
+        out, aux = _moe_ep(p, x, cfg, ep_mesh, ep_bt)
+        if "shared" in p:
+            out = out + swiglu_mlp(p["shared"], x)
+        if "dense_residual" in p:
+            out = out + swiglu_mlp(p["dense_residual"], x)
+        return out, aux
     if dispatch == "sort" and cfg.moe_dispatch in ("grouped", "shmap"):
         dispatch = cfg.moe_dispatch
     if dispatch == "shmap":

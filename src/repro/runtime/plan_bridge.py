@@ -13,7 +13,11 @@ bridge reduces each segment's strategies to their dominant choice:
   * ring-attention SP degree copied verbatim from ``plan.sp_degree``
     (the searched axis, format v4) — the executor shards token dims over
     the mesh's ``seq`` axis and runs the ring kernel via
-    runtime/sequence.py.
+    runtime/sequence.py,
+  * expert-parallel degree copied verbatim from ``plan.ep_degree``
+    (the searched axis, format v5) — expert weights shard over the mesh's
+    ``expert`` axis and MoE dispatch runs the all-to-all path
+    (models/moe.py::_moe_ep).
 """
 from __future__ import annotations
 
@@ -61,8 +65,11 @@ def policy_from_plan(cfg: ModelConfig, plan: ParallelPlan, *,
             remat=any(remat), batch=plan.global_batch,
             hbm_capacity=hbm_capacity)
         seq_shard = not mm.fits      # §Perf rule: only when stash overflows
+    ep = plan.ep_degree
     return ShardPolicy(tp=tp, zero=zero, remat_segments=tuple(remat),
-                       seq_shard=seq_shard, sp_degree=plan.sp_degree)
+                       seq_shard=seq_shard, sp_degree=plan.sp_degree,
+                       ep_degree=ep,
+                       expert_axis="expert" if ep > 1 else "model")
 
 
 def schedule_program_from_plan(plan: ParallelPlan, *,

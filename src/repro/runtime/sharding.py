@@ -14,7 +14,11 @@ as follows (DESIGN.md §3):
   * PP        -> the shard_map pipeline runtime (runtime/pipeline.py),
   * SP        -> batch token dims sharded along a ``seq`` axis; attention
                  runs the ring kernel (kernels/ring_attention.py) via
-                 runtime/sequence.py.
+                 runtime/sequence.py,
+  * EP        -> expert weights sharded along an ``expert`` axis (plan
+                 format v5 ``ep_degree``); the batch dim co-shards over it
+                 and MoE dispatch runs the all-to-all path
+                 (models/moe.py::_moe_ep).
 
 Every rule checks divisibility and falls back to replication, so any
 (architecture x shape x mesh) combination lowers.
@@ -44,12 +48,20 @@ class ShardPolicy:
                                    # shard over the mesh's "seq" axis and
                                    # attention runs the ring kernel
                                    # (kernels/ring_attention.py)
+    ep_degree: int = 1             # expert parallelism: the searched
+                                   # plan.ep_degree (format v5) — expert
+                                   # weights shard over the mesh's "expert"
+                                   # axis, the batch co-shards over it, and
+                                   # MoE dispatch runs the all-to-all path
 
     @staticmethod
     def from_strategy(strategy, remat_segments=None) -> "ShardPolicy":
+        ep = getattr(strategy, "ep", 1)
         return ShardPolicy(tp=strategy.tp > 1, zero=strategy.sdp > 1,
                            remat_segments=tuple(remat_segments or ()) or None,
-                           sp_degree=getattr(strategy, "sp", 1))
+                           sp_degree=getattr(strategy, "sp", 1),
+                           ep_degree=ep,
+                           expert_axis="expert" if ep > 1 else "model")
 
 
 def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
@@ -167,8 +179,16 @@ def batch_shardings(abstract_batch, mesh: Mesh,
     ring-attention sequence parallelism (``pol.sp_degree > 1``), dim 1 —
     the token dimension of ``(B, S, ...)`` batches — additionally shards
     over ``seq``, so each device materialises only its ``S / sp`` token
-    panel (the plan's activation-memory ÷ sp_degree claim)."""
+    panel (the plan's activation-memory ÷ sp_degree claim).
+
+    With ``pol.ep_degree > 1`` and an ``expert`` mesh axis, the batch dim
+    additionally co-shards over ``expert`` — expert parallelism acts as
+    data parallelism for the non-expert compute, matching the x_spec the
+    MoE all-to-all path (models/moe.py::_moe_ep) shard_maps with."""
     bt = batch_axes(mesh)
+    if (pol is not None and pol.ep_degree > 1
+            and "expert" in mesh.axis_names):
+        bt = bt + ("expert",)
     seq = ("seq" if (pol is not None and pol.sp_degree > 1
                      and "seq" in mesh.axis_names) else None)
 

@@ -45,7 +45,7 @@ def test_format_version_stamp_and_zb_h1_roundtrip():
 
     plan = _plan(schedule="zb-h1")
     d = plan.to_json()
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 5
     plan2 = ParallelPlan.loads(plan.dumps())
     assert plan2 == plan and plan2.schedule == "zb-h1"
     # v0/v1 readers' keys are all still present (additive evolution only)
@@ -53,7 +53,7 @@ def test_format_version_stamp_and_zb_h1_roundtrip():
                 "global_batch", "n_micro", "schedule", "vpp_degree"):
         assert key in d, key
     # the canonical byte-oracle includes the stamp on both sides
-    assert json.loads(plan.canonical_dumps())["format_version"] == 4
+    assert json.loads(plan.canonical_dumps())["format_version"] == 5
 
 
 def test_v3_json_without_sp_degree_still_loads():

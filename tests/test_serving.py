@@ -115,6 +115,22 @@ def test_engine_rejects_oversized_prompt_and_unsupported_arch():
         ServingEngine(ssm_cfg, params, make_local_mesh(), ecfg)
 
 
+def test_supports_paged_decode_gate_values():
+    """MoE decoders pass the gate; SSM/hybrid/enc-dec are gated out —
+    the predicate docs/serving.md cross-links."""
+    from repro.models.transformer import supports_paged_decode
+    moe_cfg = dataclasses.replace(TINY, arch_type="moe", n_experts=4,
+                                  top_k=2)
+    assert supports_paged_decode(moe_cfg)
+    assert not supports_paged_decode(
+        dataclasses.replace(TINY, arch_type="ssm", ssm_state=8))
+    assert not supports_paged_decode(
+        dataclasses.replace(TINY, arch_type="hybrid", ssm_state=8,
+                            attn_every=2))
+    assert not supports_paged_decode(
+        dataclasses.replace(TINY, is_encoder_decoder=True, n_enc_layers=2))
+
+
 def test_engine_config_validates_geometry():
     from repro.serving import EngineConfig
     with pytest.raises(ValueError, match="multiple"):
@@ -143,7 +159,7 @@ def test_v3_serving_roundtrip():
     from repro.core import PLAN_FORMAT_VERSION, ParallelPlan
     plan = _serving_plan()
     d = json.loads(plan.dumps())
-    assert d["format_version"] == PLAN_FORMAT_VERSION == 4
+    assert d["format_version"] == PLAN_FORMAT_VERSION == 5
     back = ParallelPlan.from_json(d)
     assert back.serving == plan.serving
     assert back.canonical_dumps() == plan.canonical_dumps()
@@ -162,7 +178,7 @@ def test_v2_plans_still_load_with_no_serving():
 def test_detect_format_version_serving():
     from repro.analysis import detect_format_version
     d = json.loads(_serving_plan().dumps())
-    assert detect_format_version(d) == 4
+    assert detect_format_version(d) == 5
     d.pop("format_version")
     # unstamped + default sp_degree/seq_len: the serving section implies v3
     assert detect_format_version(d) == 3
@@ -236,7 +252,7 @@ def test_slo_sweep_emits_certifying_v3_plans(slo_points):
     assert feasible, "no SLO point feasible on the 8-GPU paper cluster"
     for pt in feasible:
         d = json.loads(pt.plan.dumps())
-        assert d["format_version"] == 4
+        assert d["format_version"] == 5
         diags = verify_plan_json(d)
         assert not [x for x in diags if x.severity == "error"], \
             [x.format() for x in diags]
